@@ -1,0 +1,2 @@
+# Benchmark suite: one module per paper table/figure (Fig 1/2/3/4) plus the
+# roofline aggregation over the dry-run artifacts.

@@ -1,0 +1,48 @@
+"""§Roofline: aggregate the dry-run JSON artifacts into the per-(arch x shape
+x mesh) three-term roofline table (EXPERIMENTS.md reads this output)."""
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(path=DRYRUN_DIR):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(report):
+    recs = load_records()
+    if not recs:
+        report.note("no dry-run artifacts yet: run "
+                    "`python -m repro.launch.dryrun --all --both-meshes`")
+        return
+    report.section("SS-Roofline: three-term roofline per (arch x shape x mesh)")
+    ok = skipped = failed = 0
+    for r in recs:
+        name = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "skipped":
+            skipped += 1
+            report.row("roofline", name, status="skipped")
+            continue
+        if r.get("status") != "ok":
+            failed += 1
+            report.row("roofline", name, status="FAILED")
+            continue
+        ok += 1
+        report.row(
+            "roofline", name,
+            t_compute_ms=round(r["t_compute"] * 1e3, 2),
+            t_memory_ms=round(r["t_memory"] * 1e3, 2),
+            t_collective_ms=round(r["t_collective"] * 1e3, 2),
+            bottleneck=r["bottleneck"],
+            useful_pct=round(r["useful_flops_ratio"] * 100, 1),
+            roofline_pct=round(r["roofline_fraction"] * 100, 2),
+            hbm_gb=r["hbm_per_chip_gb"],
+            fits=r["fits_hbm"])
+    report.note(f"cells: {ok} ok, {skipped} skipped, {failed} failed")

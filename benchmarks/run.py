@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3]
+
+Output: ``section`` headers + ``name,us_per_call,derived...`` CSV rows.
+"""
+import argparse
+import sys
+import time
+
+
+class Report:
+    def __init__(self):
+        self.rows = []
+
+    def section(self, title):
+        print(f"\n## {title}", flush=True)
+
+    def note(self, text):
+        print(f"# NOTE: {text}", flush=True)
+
+    def row(self, table, name, **kv):
+        parts = [f"{k}={v}" for k, v in kv.items()]
+        print(f"{table},{name}," + ",".join(parts), flush=True)
+        self.rows.append((table, name, kv))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter over benchmark module names")
+    args = ap.parse_args(argv)
+
+    from . import (bench_async_apps, bench_async_micro, bench_balance,
+                   bench_generations, roofline_table)
+    benches = [
+        ("bench_balance(Fig1+S6)", bench_balance.run),
+        ("bench_generations(Fig2)", bench_generations.run),
+        ("bench_async_micro(Fig3)", bench_async_micro.run),
+        ("bench_async_apps(Fig4)", bench_async_apps.run),
+        ("roofline_table(SSRoofline)", roofline_table.run),
+    ]
+    report = Report()
+    t00 = time.time()
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n==== {name} ====", flush=True)
+        t0 = time.time()
+        fn(report)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    print(f"\n# all benchmarks done in {time.time()-t00:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

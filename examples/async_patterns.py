@@ -1,0 +1,51 @@
+"""The paper's three async-copy patterns, demonstrated on the actual Pallas
+kernels (interpret mode) with the TPU-target speedup model alongside —
+a runnable version of paper Fig 3/4.
+
+    PYTHONPATH=src python examples/async_patterns.py
+"""
+import sys
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.async_pipeline import Strategy
+from repro.core.hardware import PEAK_FLOPS, HBM_BW
+from repro.kernels import ops
+from repro.kernels.stream import stream_flops_bytes
+
+
+def main():
+    print(__doc__)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (512, 256), jnp.float32)
+
+    print(f"{'strategy':>16s} {'iters':>6s} {'host us':>9s} "
+          f"{'TPU model':>10s}  (speedup over sync)")
+    from benchmarks.bench_async_micro import model_time
+    # the TPU-model column is evaluated at a production tile-stream size
+    # (16 MiB working set); the host column times the small demo kernel
+    for iters in (1, 16, 256):
+        flops, nbytes = stream_flops_bytes((1 << 14, 256), iters)
+        t_sync = model_time(Strategy.SYNC, flops, nbytes)
+        for s in Strategy:
+            fn = lambda: ops.stream(x, iters=iters, strategy=s,
+                                    tile_rows=16, n_tiles=8)
+            jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            us = (time.perf_counter() - t0) * 1e6
+            model = t_sync / model_time(s, flops, nbytes)
+            print(f"{s.value:>16s} {iters:>6d} {us:>9.0f} {model:>9.2f}x")
+        print()
+    print("paper's conclusion, reproduced: overlap/drop-off win while the "
+          "kernel is memory-bound (low iters); at high arithmetic intensity "
+          "the async machinery is pure overhead.")
+
+
+if __name__ == "__main__":
+    main()

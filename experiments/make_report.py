@@ -1,0 +1,34 @@
+"""Render the §Dry-run / §Roofline markdown tables from the dry-run JSONs."""
+import glob, json, os, sys
+
+DIR = os.path.join(os.path.dirname(__file__), "dryrun")
+
+def fmt_ms(s): return f"{s*1e3:,.1f}"
+
+def main():
+    recs = [json.load(open(f)) for f in sorted(glob.glob(f"{DIR}/*.json"))]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["mesh"], r["arch"], order.get(r["shape"], 9)))
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in recs if r["mesh"] == mesh]
+        print(f"\n### Mesh {mesh} ({'256 chips, single pod' if mesh=='16x16' else '512 chips, 2 pods'})\n")
+        print("| arch | shape | HBM/chip (GB) | fits | t_compute (ms) | "
+              "t_memory (ms) | t_collective (ms) | bottleneck | useful flops | roofline |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for r in sub:
+            if r.get("status") == "skipped":
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                      f"skipped (full attention @524k) | — | — |")
+                continue
+            if r.get("status") != "ok":
+                print(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {r['hbm_per_chip_gb']:.2f} "
+                  f"| {'Y' if r['fits_hbm'] else 'N'} "
+                  f"| {fmt_ms(r['t_compute'])} | {fmt_ms(r['t_memory'])} "
+                  f"| {fmt_ms(r['t_collective'])} | {r['bottleneck']} "
+                  f"| {r['useful_flops_ratio']*100:.1f}% "
+                  f"| {r['roofline_fraction']*100:.2f}% |")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""The paper's asynchronous-copy patterns as composable Pallas TPU emitters.
+
+This is the core contribution adapted to TPU: the A100 ``cp.async``
+(global -> shared memory, register-bypassing, overlappable with compute)
+becomes the TPU async DMA (HBM -> VMEM via ``pltpu.make_async_copy`` + DMA
+semaphores).  The paper's Algorithms 1-3 map to four selectable strategies:
+
+  Strategy.SYNC            GPU baseline: copy, wait, *stage through a second
+                           VMEM buffer* (models the register round-trip),
+                           compute.  DMA engine idle during compute.
+  Strategy.REGISTER_BYPASS Alg. 1: copy, wait, compute directly on the DMA
+                           landing buffer.  No overlap, no staging copy.
+  Strategy.OVERLAP         Alg. 2: k-slot ring buffer, tile i+k-1 in flight
+                           while tile i computes; wait placed *before* compute
+                           (the paper's block-synchronization point).
+  Strategy.DROP_OFF        Alg. 3: sub-tile chunks; wait for chunk c, read it
+                           into VREG values, issue chunk c+1's DMA *before*
+                           computing on c.  No tile-level barrier.
+
+Kernels receive a ``TileStream`` per HBM operand and drive it through one of
+the ``emit_*`` loop builders below, or hand-roll the pattern when their data
+flow does not fit (wavefront kernels).  Everything here works identically in
+``interpret=True`` mode on CPU, which is how tests validate the kernels.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+class Strategy(enum.Enum):
+    SYNC = "sync"
+    REGISTER_BYPASS = "register_bypass"
+    OVERLAP = "overlap"
+    DROP_OFF = "drop_off"
+
+
+ALL_STRATEGIES: Tuple[Strategy, ...] = tuple(Strategy)
+
+
+def parse_strategy(name: str) -> Strategy:
+    return Strategy(name)
+
+
+@dataclass
+class TileStream:
+    """Binds one HBM operand to a VMEM ring buffer + DMA semaphores.
+
+    ``hbm``      HBM ref (BlockSpec memory_space=pl.ANY)
+    ``vmem``     VMEM scratch shaped (depth, *tile_shape)
+    ``sem``      DMA semaphore array shaped (depth,)
+    ``index``    tile_index -> tuple of pl.ds()/slices into ``hbm``
+    """
+    hbm: Any
+    vmem: Any
+    sem: Any
+    index: Callable[[Any], Tuple]
+    depth: int
+
+    def copy(self, i, slot):
+        return pltpu.make_async_copy(
+            self.hbm.at[self.index(i)], self.vmem.at[slot], self.sem.at[slot])
+
+    def start(self, i, slot):
+        self.copy(i, slot).start()
+
+    def wait(self, i, slot):
+        self.copy(i, slot).wait()
+
+
+def _slot(i, depth: int):
+    return jax.lax.rem(i, depth) if depth > 1 else 0
+
+
+def _when(cond):
+    """pl.when that also accepts static python bools (n_tiles may be traced)."""
+    if isinstance(cond, bool):
+        def deco(f):
+            return f() if cond else None
+        return deco
+    return pl.when(cond)
+
+
+# ---------------------------------------------------------------------------
+# Loop emitters.  ``compute(i, bufs)`` receives the tile index and one VMEM
+# ref per stream and must write its own outputs (to an output stream's VMEM
+# or directly to an output HBM ref via a write-back TileStream).
+# ---------------------------------------------------------------------------
+
+def emit_sync(streams: Sequence[TileStream], n_tiles: int,
+              compute: Callable, *, staging: Optional[Sequence[Any]] = None):
+    """Paper baseline.  Single-buffered; if ``staging`` VMEM refs are given,
+    each tile is copied VMEM->VMEM first (the register-round-trip model)."""
+    def body(i, _):
+        for s in streams:
+            s.start(i, 0)
+        for s in streams:
+            s.wait(i, 0)
+        if staging is not None:
+            for s, stage in zip(streams, staging):
+                stage[...] = s.vmem[0]
+            compute(i, [stage for stage in staging])
+        else:
+            compute(i, [s.vmem.at[0] for s in streams])
+        return ()
+    jax.lax.fori_loop(0, n_tiles, body, ())
+
+
+def emit_register_bypass(streams: Sequence[TileStream], n_tiles: int,
+                         compute: Callable):
+    """Alg. 1: async copy direct to VMEM, immediate wait, compute in place."""
+    emit_sync(streams, n_tiles, compute, staging=None)
+
+
+def emit_overlap(streams: Sequence[TileStream], n_tiles: int,
+                 compute: Callable, *, depth: int):
+    """Alg. 2: ``depth``-deep multibuffered pipeline with prefetch."""
+    assert depth >= 2, "overlap needs a ring buffer of depth >= 2"
+    # warm-up: issue the first depth-1 copies (static unroll keeps slots
+    # static; guards allow a traced n_tiles)
+    for j in range(depth - 1):
+        @_when(j < n_tiles)
+        def _(j=j):
+            for s in streams:
+                s.start(j, j % depth)
+
+    def body(i, _):
+        slot = _slot(i, depth)
+        nxt = _slot(i + depth - 1, depth)
+        @pl.when(i + depth - 1 < n_tiles)
+        def _():
+            for s in streams:
+                s.start(i + depth - 1, nxt)
+        for s in streams:
+            s.wait(i, slot)
+        compute(i, [s.vmem.at[slot] for s in streams])
+        return ()
+    jax.lax.fori_loop(0, n_tiles, body, ())
+
+
+def emit_drop_off(streams: Sequence[TileStream], n_tiles: int,
+                  compute_value: Callable, *, depth: int = 2):
+    """Alg. 3 (TPU analogue): double-buffer at *chunk* granularity; after the
+    wait, the chunk is read into VREG values and the next DMA is issued
+    *before* computing.  ``compute_value(i, vals)`` receives jnp arrays (the
+    "registers") and returns nothing (it writes outputs itself)."""
+    assert depth >= 2
+    @_when(0 < n_tiles)
+    def _():
+        for s in streams:
+            s.start(0, 0)
+
+    def body(i, _):
+        slot = _slot(i, depth)
+        nxt = _slot(i + 1, depth)
+        for s in streams:
+            s.wait(i, slot)
+        # "drop off" into registers
+        vals = [s.vmem[slot] for s in streams]
+        # issue the next copy before computing (no block-level barrier)
+        @pl.when(i + 1 < n_tiles)
+        def _():
+            for s in streams:
+                s.start(i + 1, nxt)
+        compute_value(i, vals)
+        return ()
+    jax.lax.fori_loop(0, n_tiles, body, ())
+
+
+def emit(strategy: Strategy, streams: Sequence[TileStream], n_tiles: int,
+         compute: Callable, *, depth: int = 2,
+         staging: Optional[Sequence[Any]] = None):
+    """Dispatch a loop under the requested strategy.
+
+    ``compute(i, bufs)`` gets VMEM refs for SYNC/REGISTER_BYPASS/OVERLAP and
+    jnp values for DROP_OFF (register semantics).
+    """
+    if strategy == Strategy.SYNC:
+        emit_sync(streams, n_tiles, compute, staging=staging)
+    elif strategy == Strategy.REGISTER_BYPASS:
+        emit_register_bypass(streams, n_tiles, compute)
+    elif strategy == Strategy.OVERLAP:
+        emit_overlap(streams, n_tiles, compute, depth=max(depth, 2))
+    elif strategy == Strategy.DROP_OFF:
+        emit_drop_off(streams, n_tiles, compute, depth=max(depth, 2))
+    else:  # pragma: no cover
+        raise ValueError(strategy)
+
+
+@dataclass
+class WriteBack:
+    """Double-buffered VMEM -> HBM result drain (the output-side Overlap).
+
+    ``vmem`` shaped (depth, *tile_shape); ``index(i)`` gives the HBM slice
+    for tile i.  ``push(i, val)`` recycles slots, waiting only when the slot's
+    previous DMA is still in flight; call ``drain(n_tiles)`` after the loop.
+    """
+    hbm: Any
+    vmem: Any
+    sem: Any
+    index: Callable[[Any], Tuple]
+    depth: int = 2
+
+    def _copy(self, i, slot):
+        return pltpu.make_async_copy(
+            self.vmem.at[slot], self.hbm.at[self.index(i)], self.sem.at[slot])
+
+    def push(self, i, val):
+        slot = _slot(i, self.depth)
+        @pl.when(i >= self.depth)
+        def _():
+            self._copy(i - self.depth, slot).wait()
+        self.vmem[slot] = val
+        self._copy(i, slot).start()
+
+    def drain(self, n_tiles: int):
+        for j in range(min(self.depth, n_tiles)):
+            i = n_tiles - 1 - j
+            self._copy(i, _slot(i, self.depth)).wait()
+
+
+def ring_scratch(depth: int, tile_shape: Tuple[int, ...], dtype) -> Any:
+    """VMEM ring-buffer scratch shape for a TileStream."""
+    return pltpu.VMEM((depth, *tile_shape), dtype)
+
+
+def dma_sems(depth: int) -> Any:
+    return pltpu.SemaphoreType.DMA((depth,))
+
+
+def scratch_for(strategy: Strategy, tile_shape: Tuple[int, ...], dtype,
+                *, depth: int = 2):
+    """(vmem_scratch, sem_scratch, effective_depth) for a strategy."""
+    d = 1 if strategy in (Strategy.SYNC, Strategy.REGISTER_BYPASS) else max(depth, 2)
+    return ring_scratch(d, tile_shape, dtype), dma_sems(d), d

@@ -1,0 +1,72 @@
+"""Machine-balance analysis (paper Fig. 1 + §6 expectation model).
+
+The paper derives, for each chip:
+  * machine balance B/F = memory_bandwidth / peak_flops  (fp32 and fp64),
+  * compute density = FLOPS / mm^2,
+and from any pair (old, new) the *expected minimum speedup*
+
+    T_speedup = min(FLOP_new/FLOP_old, BW_new/BW_old)
+
+which holds regardless of whether an application is compute- or memory-bound
+(paper §6: V100→A100 gives min(1.38, 1.73) = 1.38x — and Rodinia measured 1.34x,
+i.e. the A100 under-delivers). This module reproduces those derivations and is
+validated against the paper's reported ratios in tests/test_balance.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .hardware import Chip, CATALOG
+
+
+@dataclass(frozen=True)
+class Balance:
+    name: str
+    bf_f32: float                # bytes per fp32 flop
+    bf_f64: float
+    density_f32: float           # GFLOPS / mm^2
+    density_f64: float
+
+
+def machine_balance(chip: Chip) -> Balance:
+    bf32 = chip.mem_bw_gbs / (chip.tflops_f32 * 1e3)
+    bf64 = chip.mem_bw_gbs / (chip.tflops_f64 * 1e3) if chip.tflops_f64 else float("inf")
+    d32 = chip.tflops_f32 * 1e3 / chip.die_mm2 if chip.die_mm2 else float("nan")
+    d64 = chip.tflops_f64 * 1e3 / chip.die_mm2 if chip.die_mm2 else float("nan")
+    return Balance(chip.name, bf32, bf64, d32, d64)
+
+
+def expected_speedup(old: Chip, new: Chip, precision: str = "f32") -> float:
+    """Paper §6: T_speedup = min(FLOP ratio, BW ratio)."""
+    if precision == "f64":
+        flop_ratio = new.tflops_f64 / old.tflops_f64
+    else:
+        flop_ratio = new.tflops_f32 / old.tflops_f32
+    bw_ratio = new.mem_bw_gbs / old.mem_bw_gbs
+    return min(flop_ratio, bw_ratio)
+
+
+def roofline_time(flops: float, bytes_moved: float, chip: Chip,
+                  precision: str = "f32") -> float:
+    """Classic 2-term roofline execution-time estimate (seconds) on one chip."""
+    peak = (chip.tflops_f64 if precision == "f64" else chip.tflops_f32) * 1e12
+    t_compute = flops / peak
+    t_memory = bytes_moved / (chip.mem_bw_gbs * 1e9)
+    return max(t_compute, t_memory)
+
+
+def attainable_flops(intensity: float, chip: Chip, precision: str = "f32") -> float:
+    """Roofline attainable FLOP/s at a given arithmetic intensity (flops/byte)."""
+    peak = (chip.tflops_f64 if precision == "f64" else chip.tflops_f32) * 1e12
+    return min(peak, intensity * chip.mem_bw_gbs * 1e9)
+
+
+def ridge_point(chip: Chip, precision: str = "f32") -> float:
+    """Arithmetic intensity (flops/byte) where the roofline bends."""
+    peak = (chip.tflops_f64 if precision == "f64" else chip.tflops_f32) * 1e12
+    return peak / (chip.mem_bw_gbs * 1e9)
+
+
+def lineage_table(precision: str = "f32") -> Dict[str, Balance]:
+    return {name: machine_balance(chip) for name, chip in CATALOG.items()}

@@ -1,0 +1,82 @@
+"""Hardware catalog.
+
+Reproduces the paper's Table 1 (eight Nvidia GPUs across five generations)
+verbatim, and extends the lineage with the TPU generations this framework
+targets — the machine-balance analysis (paper Fig. 1) and the expected-speedup
+model (paper §6) are computed over these records.
+
+All numbers are peak/vendor figures, matching the paper's methodology
+(techpowerup / vendor datasheets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str
+    vendor: str
+    year: str
+    arch: str
+    grade: str                     # "datacenter" | "consumer" | "tpu"
+    mem_gb: float
+    mem_bw_gbs: float              # external memory bandwidth, GB/s
+    tflops_f32: float              # fp32 (GPU) / bf16 (TPU — the lineage metric)
+    tflops_f64: float
+    n_cores: int                   # SMs (GPU) / TensorCores-per-chip (TPU)
+    tdp_w: float
+    die_mm2: float
+    # interconnect (per-link, unidirectional)
+    link_gbs: float = 0.0
+    vmem_mb: float = 0.0           # on-chip scratch (shared mem / VMEM)
+
+
+# --- paper Table 1, verbatim -------------------------------------------------
+
+GPUS: Tuple[Chip, ...] = (
+    # Tesla / data-center
+    Chip("K80", "nvidia", "2014Q4", "Kepler", "datacenter", 12, 240.6, 4.113, 1.371, 13, 300, 561),
+    Chip("P100", "nvidia", "2016Q2", "Pascal", "datacenter", 16, 732.2, 10.61, 5.304, 56, 300, 610),
+    Chip("V100", "nvidia", "2017Q3", "Volta", "datacenter", 16, 897.0, 14.13, 7.066, 80, 300, 815),
+    Chip("A100", "nvidia", "2020Q3", "Ampere", "datacenter", 40, 1555.0, 19.49, 9.746, 108, 250, 826),
+    # Workstation / consumer
+    Chip("GTX745", "nvidia", "2014Q1", "Maxwell", "consumer", 4, 28.80, 0.793, 0.02479, 3, 55, 148),
+    Chip("K2200", "nvidia", "2014Q3", "Maxwell", "consumer", 4, 80.19, 1.439, 0.04496, 5, 68, 148),
+    Chip("GTX1050Ti", "nvidia", "2016Q4", "Pascal", "consumer", 4, 112.1, 2.138, 0.0668, 6, 75, 132),
+    Chip("RTX2060S", "nvidia", "2019Q3", "Turing", "consumer", 8, 448.0, 7.181, 0.224, 34, 175, 445),
+)
+
+# --- TPU lineage extension ---------------------------------------------------
+# tflops_f32 column holds bf16/matmul peak for TPUs (the throughput metric the
+# lineage comparison uses); f64 is N/A on TPU (0.0).
+
+TPUS: Tuple[Chip, ...] = (
+    Chip("TPUv2", "google", "2017", "TPUv2", "tpu", 8, 700.0, 45.0, 0.0, 2, 280, 0, link_gbs=62.5, vmem_mb=24),
+    Chip("TPUv3", "google", "2018", "TPUv3", "tpu", 16, 900.0, 123.0, 0.0, 2, 220, 0, link_gbs=81.25, vmem_mb=32),
+    Chip("TPUv4", "google", "2021", "TPUv4", "tpu", 32, 1200.0, 275.0, 0.0, 2, 170, 0, link_gbs=50.0, vmem_mb=128),
+    Chip("TPUv5e", "google", "2023", "TPUv5e", "tpu", 16, 819.0, 197.0, 0.0, 1, 0, 0, link_gbs=50.0, vmem_mb=128),
+    Chip("TPUv5p", "google", "2023", "TPUv5p", "tpu", 95, 2765.0, 459.0, 0.0, 2, 0, 0, link_gbs=100.0, vmem_mb=128),
+)
+
+CATALOG: Dict[str, Chip] = {c.name: c for c in GPUS + TPUS}
+
+
+# --- the framework's target chip ---------------------------------------------
+# All roofline terms in launch/dryrun.py + benchmarks use these constants
+# (given in the assignment): TPU v5e.
+
+TARGET = CATALOG["TPUv5e"]
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per-chip per-direction)
+VMEM_BYTES = 128 * 2 ** 20   # ~128 MiB VMEM per chip
+HBM_BYTES = 16 * 2 ** 30     # 16 GiB per chip
+
+
+def get_chip(name: str) -> Chip:
+    try:
+        return CATALOG[name]
+    except KeyError:
+        raise KeyError(f"unknown chip {name!r}; known: {sorted(CATALOG)}") from None

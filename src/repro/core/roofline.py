@@ -1,0 +1,277 @@
+"""Three-term roofline analysis from compiled XLA artifacts.
+
+For every (architecture x shape x mesh) dry-run cell we derive, per chip:
+
+    compute term    = HLO_FLOPs / PEAK_FLOPS            [s]
+    memory term     = HLO_bytes / HBM_BW                [s]
+    collective term = wire_bytes_per_chip / ICI_BW      [s]
+
+``compiled.cost_analysis()`` provides HLO_FLOPs / HLO_bytes for the per-device
+SPMD program.  Collective traffic is NOT in cost_analysis, so we parse the HLO
+text and, for each all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, estimate the per-chip wire bytes under ring algorithms:
+
+    all-gather       shard * (N-1)            (each device forwards N-1 shards)
+    reduce-scatter   input * (N-1)/N
+    all-reduce       input * 2(N-1)/N         (RS + AG)
+    all-to-all       input * (N-1)/N
+    collective-permute  input * 1
+
+where N is the replica-group size parsed from the op's ``replica_groups``.
+Reported times are *per-chip* seconds, directly comparable across terms (the
+prompt's ``collective_bytes / (chips x link_bw)`` with whole-job bytes equals
+per-chip wire bytes / link_bw).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Optional
+
+from . import hardware
+
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+[a-z0-9]*|pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    nb = DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes_in: int          # summed operand bytes (per device)
+    bytes_out: int
+    group_size: int
+    wire_bytes: float      # per-chip ring-algorithm wire traffic
+
+
+def _ring_wire_bytes(kind: str, bytes_in: int, bytes_out: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return float(bytes_in) * (n - 1)
+    if kind == "reduce-scatter":
+        return float(bytes_in) * (n - 1) / n
+    if kind == "all-reduce":
+        return float(bytes_in) * 2 * (n - 1) / n
+    if kind == "all-to-all":
+        return float(bytes_in) * (n - 1) / n
+    if kind == "collective-permute":
+        return float(bytes_in)
+    return float(bytes_in)
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """Extract collective ops + ring wire-bytes estimates from HLO text."""
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        rhs = s.split(" = ", 1)[1]
+        # opcode follows the output shape:  f32[8,16]{1,0} all-reduce(...)
+        kind = None
+        for k in _COLLECTIVE_KINDS:
+            if re.search(rf"\b{k}(-start)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done" in rhs:
+            continue  # count only the -start of async pairs
+        shapes = _SHAPE_RE.findall(s)
+        if not shapes:
+            continue
+        # first shape literal = output; shapes inside parens = operands.
+        paren = s.find("(")
+        out_shapes = _SHAPE_RE.findall(s[:paren]) if paren > 0 else shapes[:1]
+        in_shapes = _SHAPE_RE.findall(s[paren:]) if paren > 0 else []
+        bytes_out = sum(shape_bytes(d, dims) for d, dims in out_shapes)
+        bytes_in = sum(shape_bytes(d, dims) for d, dims in in_shapes)
+        m = _GROUPS_RE.search(s)
+        if m:
+            group = m.group(1)
+            n = len([g for g in group.split(",") if g.strip() != ""])
+        else:
+            m2 = _GROUPS_IOTA_RE.search(s)
+            n = int(m2.group(2)) if m2 else 1
+        if bytes_in == 0:
+            # operand type not printed: infer the shard from the output
+            bytes_in = bytes_out // n if kind == "all-gather" else bytes_out
+        ops.append(CollectiveOp(kind, bytes_in, bytes_out, n,
+                                _ring_wire_bytes(kind, bytes_in, bytes_out, n)))
+    return ops
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float               # per-chip
+    hlo_bytes: float               # per-chip HBM traffic (fusion-optimistic)
+    collective_wire_bytes: float   # per-chip
+    hlo_bytes_upper: float = 0.0   # CPU-granularity upper bound
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    model_flops: float = 0.0       # 6*N*D (dense) / 6*N_active*D (MoE), per chip
+    peak_flops: float = hardware.PEAK_FLOPS
+    hbm_bw: float = hardware.HBM_BW
+    ici_bw: float = hardware.ICI_BW
+    # memory_analysis numbers (per chip)
+    arg_bytes: int = 0
+    out_bytes: int = 0
+    temp_bytes: int = 0
+    peak_hbm_bytes: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_wire_bytes / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time if the three terms overlap perfectly."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def t_serial(self) -> float:
+        """Upper bound: no overlap at all."""
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominating roof the *useful* model flops achieve,
+        assuming perfect overlap: MODEL_FLOPs/peak / t_bound."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / self.peak_flops) / self.t_bound
+
+    def summary(self) -> str:
+        return (f"{self.arch:>18s} {self.shape:<12s} {self.mesh:<10s} "
+                f"compute={self.t_compute*1e3:9.3f}ms "
+                f"memory={self.t_memory*1e3:9.3f}ms "
+                f"collective={self.t_collective*1e3:9.3f}ms "
+                f"bound={self.bottleneck:<10s} "
+                f"useful={self.useful_flops_ratio:6.1%} "
+                f"roofline={self.roofline_fraction:6.1%}")
+
+    def to_json(self) -> str:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return json.dumps(d, indent=1, sort_keys=True)
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, n_chips: int,
+            cost: Dict[str, float], hlo_text: str,
+            memory: Optional[object] = None,
+            model_flops_total: float = 0.0) -> RooflineReport:
+    """Build a RooflineReport from compiled-artifact outputs.
+
+    ``cost`` is ``compiled.cost_analysis()`` (per-device).  ``hlo_text`` is
+    ``compiled.as_text()``.  ``model_flops_total`` is the whole-job analytic
+    6ND flops; it is divided by n_chips here.
+    """
+    ops = parse_collectives(hlo_text)
+    counts: Dict[str, int] = {}
+    by_kind: Dict[str, float] = {}
+    wire = 0.0
+    for op in ops:
+        counts[op.kind] = counts.get(op.kind, 0) + 1
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + op.wire_bytes
+        wire += op.wire_bytes
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        collective_wire_bytes=wire,
+        collective_counts=counts,
+        collective_bytes_by_kind=by_kind,
+        model_flops=model_flops_total / max(n_chips, 1),
+    )
+    if memory is not None:
+        rep.arg_bytes = int(getattr(memory, "argument_size_in_bytes", 0))
+        rep.out_bytes = int(getattr(memory, "output_size_in_bytes", 0))
+        rep.temp_bytes = int(getattr(memory, "temp_size_in_bytes", 0))
+        rep.peak_hbm_bytes = rep.arg_bytes + rep.out_bytes + rep.temp_bytes
+    return rep
+
+
+def model_flops(n_params: int, n_tokens: int, mode: str = "train") -> float:
+    """Analytic useful flops: 6*N*D training, 2*N*D inference forward."""
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * float(n_params) * float(n_tokens)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     n_chips: int, model_flops_total: float = 0.0,
+                     memory: Optional[object] = None) -> RooflineReport:
+    """Loop-aware roofline from a compiled executable (scan bodies scaled by
+    their trip counts — see core.hlo_cost)."""
+    from .hlo_cost import cost_with_loops
+    c = cost_with_loops(compiled)
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        hlo_flops=c.flops, hlo_bytes=c.bytes_fused,
+        collective_wire_bytes=c.wire_bytes,
+        collective_counts=dict(c.collective_counts),
+        collective_bytes_by_kind=dict(c.collective_bytes),
+        model_flops=model_flops_total / max(n_chips, 1),
+    )
+    rep.hlo_bytes_upper = c.bytes
+    if memory is None and hasattr(compiled, "memory_analysis"):
+        try:
+            memory = compiled.memory_analysis()
+        except Exception:
+            memory = None
+    if memory is not None:
+        rep.arg_bytes = int(getattr(memory, "argument_size_in_bytes", 0))
+        rep.out_bytes = int(getattr(memory, "output_size_in_bytes", 0))
+        rep.temp_bytes = int(getattr(memory, "temp_size_in_bytes", 0))
+        rep.peak_hbm_bytes = rep.arg_bytes + rep.out_bytes + rep.temp_bytes
+    return rep

@@ -1,0 +1,3 @@
+from .pipeline import Prefetcher, synth_batch
+
+__all__ = ["Prefetcher", "synth_batch"]

@@ -1,0 +1,7 @@
+"""Distribution substrate: logical sharding rules + fault tolerance."""
+from . import sharding
+from .sharding import (Param, ShardingRules, default_rules, logical,
+                       split_tree, use_rules)
+
+__all__ = ["sharding", "Param", "ShardingRules", "default_rules", "logical",
+           "split_tree", "use_rules"]

@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules.
+
+Model code annotates arrays with *logical* axis names ("batch", "heads",
+"mlp", "vocab", "experts", ...).  A ShardingRules context maps those names to
+physical mesh axes; outside any context (single-device tests) annotations are
+no-ops.  This is the MaxText-style indirection that lets one model definition
+run on any mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+class ShardingRules(NamedTuple):
+    mesh: Mesh
+    rules: dict          # logical name -> physical mesh axis (or tuple / None)
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        phys = []
+        for a in axes:
+            if a is None:
+                phys.append(None)
+            else:
+                phys.append(self.rules.get(a))
+        return P(*phys)
+
+    def sharding(self, axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes))
+
+
+_ctx = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def _axis_prod(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, str):
+        phys = (phys,)
+    return int(np.prod([mesh.shape[p] for p in phys]))
+
+
+def safe_spec(rules: "ShardingRules", axes: Sequence[Optional[str]],
+              shape: Sequence[int]) -> P:
+    """Like rules.spec but drops mappings that do not divide the dim size
+    (zero-size state fields, odd head counts on tiny smoke configs), and
+    truncates/pads the axes to the value's rank (placeholder state fields
+    may have fewer dims than the full-rank annotation)."""
+    shape = tuple(shape)
+    axes = tuple(axes)[:len(shape)]
+    axes = axes + (None,) * (len(shape) - len(axes))
+    out = []
+    used = set()
+    for a, dim in zip(axes, shape):
+        phys = rules.rules.get(a) if a is not None else None
+        if phys is not None:
+            n = _axis_prod(rules.mesh, phys)
+            if dim == 0 or n == 0 or dim % n != 0:
+                phys = None
+        if phys is not None:
+            names = phys if isinstance(phys, tuple) else (phys,)
+            if any(p in used for p in names):
+                phys = None          # a mesh axis may appear only once
+            else:
+                used.update(names)
+        out.append(phys)
+    return P(*out)
+
+
+def logical(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o context).
+    Mappings that do not divide the dimension are dropped."""
+    r = current_rules()
+    if r is None:
+        return x
+    spec = safe_spec(r, axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def axis_size(logical_name: str) -> int:
+    """Product of mesh-axis sizes a logical name maps to (1 w/o context)."""
+    r = current_rules()
+    if r is None:
+        return 1
+    phys = r.rules.get(logical_name)
+    if phys is None:
+        return 1
+    if isinstance(phys, str):
+        phys = (phys,)
+    return int(np.prod([r.mesh.shape[p] for p in phys]))
+
+
+def mesh_or_none() -> Optional[Mesh]:
+    r = current_rules()
+    return r.mesh if r is not None else None
+
+
+def default_rules(mesh: Mesh, *, shard_kv: bool = True,
+                  fsdp: bool = False, seq_shard: bool = False) -> ShardingRules:
+    """Physical mapping for the production meshes.
+
+    batch   -> all data-like axes ("pod" included when present)
+    heads / mlp / vocab / experts -> "model" (tensor/expert parallelism)
+    kv      -> "model" when the arch's kv-head count divides the TP degree
+    embed   -> data axes when fsdp=True (ZeRO-3-style param sharding)
+    seq     -> data axes when seq_shard=True (sequence parallelism)
+    """
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names) or None
+    model = "model" if "model" in names else None
+    rules = {
+        "batch": data_axes,
+        "heads": model,
+        "kv": model if shard_kv else None,
+        "mlp": model,
+        "vocab": model,
+        "experts": model,
+        "embed": data_axes if fsdp else None,
+        "seq": data_axes if seq_shard else None,
+        "kvlen": None,
+        "residual": None,      # activation residual-stream dim (SP target)
+        "state": None,
+        # expert-weight ff dim: FSDP-sharded over the data axes always (the
+        # qwen3-moe expert stack is 908 GB fp32 — TP alone cannot hold it)
+        "expert_shard": data_axes,
+    }
+    return ShardingRules(mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Param annotation: initializers return Param(value, logical_axes); these
+# helpers split the tree into (values, specs/shardings).
+# ---------------------------------------------------------------------------
+
+class Param(NamedTuple):
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_tree(tree):
+    """-> (value_tree, axes_tree)."""
+    vals = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return vals, axes
+
+
+def tree_shardings(axes_tree, rules: ShardingRules):
+    return jax.tree.map(
+        lambda axes: rules.sharding(axes), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def tree_shardings_safe(axes_tree, shapes_tree, rules: ShardingRules):
+    """NamedShardings with non-divisible mappings dropped per-leaf."""
+    def leaf(axes, shp):
+        return NamedSharding(rules.mesh, safe_spec(rules, axes, shp.shape))
+    return jax.tree.map(
+        leaf, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def tree_specs(axes_tree, rules: ShardingRules):
+    return jax.tree.map(
+        lambda axes: rules.spec(axes), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels implementing the paper's async-copy strategies on the
+compute hot spots: the §4.1 stream microbenchmark, the four async-amenable
+Rodinia benchmarks (Hotspot, Pathfinder, NW, LUD), and the two transformer
+hot kernels (tiled matmul, flash attention).
+
+Layout per the house style: ``<name>.py`` holds the ``pl.pallas_call`` +
+BlockSpec kernel, ``ops.py`` the jit'd wrappers, ``ref.py`` the pure-jnp
+oracles.
+"""
+from . import ops, ref
+from ..core.async_pipeline import Strategy
+
+__all__ = ["ops", "ref", "Strategy"]

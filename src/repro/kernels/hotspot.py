@@ -1,0 +1,119 @@
+"""Rodinia Hotspot (2D thermal 5-point stencil) as a Pallas TPU kernel.
+
+One kernel call performs one simulation step over an (R, C) grid.  The host
+wrapper replicate-pads the temperature field to (R+2, C+2); the kernel streams
+row bands with a 2-row halo HBM -> VMEM under the selected async-copy strategy
+(the paper finds Overlap the winning pattern here, 1.12-1.23x on A100) and
+drains results through a double-buffered write-back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.async_pipeline import (Strategy, TileStream, WriteBack, emit,
+                                   scratch_for, ring_scratch, dma_sems)
+
+OUT_DEPTH = 2
+
+
+def _hotspot_kernel(tpad_hbm, power_hbm, o_hbm, t_buf, p_buf, out_buf,
+                    t_stage, p_stage, t_sems, p_sems, out_sems,
+                    *, strategy: Strategy, n_tiles: int, tile_rows: int,
+                    cols: int, rx: float, ry: float, rz: float, cap: float,
+                    depth: int):
+    pid = pl.program_id(0)
+    base = pid * n_tiles * tile_rows
+
+    t_stream = TileStream(
+        hbm=tpad_hbm, vmem=t_buf, sem=t_sems,
+        index=lambda i: (pl.ds(base + i * tile_rows, tile_rows + 2),
+                         slice(None)),
+        depth=depth)
+    p_stream = TileStream(
+        hbm=power_hbm, vmem=p_buf, sem=p_sems,
+        index=lambda i: (pl.ds(base + i * tile_rows, tile_rows), slice(None)),
+        depth=depth)
+    wb = WriteBack(
+        hbm=o_hbm, vmem=out_buf, sem=out_sems,
+        index=lambda i: (pl.ds(base + i * tile_rows, tile_rows), slice(None)),
+        depth=OUT_DEPTH)
+
+    def stencil(tpad, power):
+        # tpad: (tile_rows+2, cols+2) halo tile; power: (tile_rows, cols)
+        t = tpad[1:-1, 1:-1]
+        up = tpad[:-2, 1:-1]
+        down = tpad[2:, 1:-1]
+        left = tpad[1:-1, :-2]
+        right = tpad[1:-1, 2:]
+        delta = cap * (power + (up + down - 2.0 * t) * ry
+                       + (left + right - 2.0 * t) * rx
+                       + (80.0 - t) * rz)
+        return t + delta
+
+    if strategy == Strategy.DROP_OFF:
+        def compute_value(i, vals):
+            wb.push(i, stencil(vals[0], vals[1]))
+        emit(strategy, [t_stream, p_stream], n_tiles, compute_value,
+             depth=depth)
+    else:
+        def compute(i, bufs):
+            wb.push(i, stencil(bufs[0][...], bufs[1][...]))
+        staging = [t_stage, p_stage] if strategy == Strategy.SYNC else None
+        emit(strategy, [t_stream, p_stream], n_tiles, compute, depth=depth,
+             staging=staging)
+
+    wb.drain(n_tiles)
+
+
+def hotspot_step_pallas(temp: jax.Array, power: jax.Array, *,
+                        strategy: Strategy = Strategy.OVERLAP,
+                        tile_rows: int = 8, depth: int = 2,
+                        rx: float = 0.1, ry: float = 0.1, rz: float = 0.5,
+                        cap: float = 0.5, grid: int = 1,
+                        interpret: bool = False) -> jax.Array:
+    """One hotspot iteration.  temp/power: (R, C); R divisible by
+    grid*tile_rows."""
+    rows, cols = temp.shape
+    block = rows // grid
+    if rows % (grid * tile_rows):
+        raise ValueError(f"rows={rows} not divisible by grid*tile_rows")
+    n_tiles = block // tile_rows
+    tpad = jnp.pad(temp, ((1, 1), (1, 1)), mode="edge")
+
+    t_buf, t_sems, d = scratch_for(strategy, (tile_rows + 2, cols + 2),
+                                   temp.dtype, depth=depth)
+    p_buf, p_sems, _ = scratch_for(strategy, (tile_rows, cols), power.dtype,
+                                   depth=depth)
+    kernel = functools.partial(
+        _hotspot_kernel, strategy=strategy, n_tiles=n_tiles,
+        tile_rows=tile_rows, cols=cols, rx=rx, ry=ry, rz=rz, cap=cap, depth=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), temp.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            t_buf, p_buf,
+            ring_scratch(OUT_DEPTH, (tile_rows, cols), temp.dtype),
+            pltpu.VMEM((tile_rows + 2, cols + 2), temp.dtype),
+            pltpu.VMEM((tile_rows, cols), power.dtype),
+            t_sems, p_sems, dma_sems(OUT_DEPTH),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(tpad, power)
+
+
+def hotspot_pallas(temp: jax.Array, power: jax.Array, *, iters: int,
+                   **kw) -> jax.Array:
+    for _ in range(iters):
+        temp = hotspot_step_pallas(temp, power, **kw)
+    return temp

@@ -1,0 +1,98 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These are the entry points the framework / benchmarks / tests use.  Every
+wrapper accepts ``strategy`` (the paper's async-copy pattern), is jitted with
+the structural arguments static, and has a matching oracle in ``ref.py``.
+``interpret=True`` (default on this CPU container) runs the kernel bodies in
+Python via the Pallas interpreter; on a real TPU pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.async_pipeline import Strategy
+from . import flash_attention as _fa
+from . import hotspot as _hs
+from . import lud as _lud
+from . import matmul as _mm
+from . import nw as _nw
+from . import pathfinder as _pf
+from . import stream as _st
+
+__all__ = [
+    "stream", "hotspot", "pathfinder", "nw", "lud", "matmul",
+    "flash_attention", "Strategy",
+]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "iters", "strategy", "tile_rows", "n_tiles", "depth", "interpret"))
+def stream(x, *, iters=1, strategy=Strategy.OVERLAP, tile_rows=8, n_tiles=4,
+           depth=2, interpret=True):
+    return _st.stream_pallas(x, iters=iters, strategy=strategy,
+                             tile_rows=tile_rows, n_tiles=n_tiles,
+                             depth=depth, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "iters", "strategy", "tile_rows", "depth", "grid", "interpret"))
+def hotspot(temp, power, *, iters=1, strategy=Strategy.OVERLAP, tile_rows=8,
+            depth=2, grid=1, interpret=True):
+    return _hs.hotspot_pallas(temp, power, iters=iters, strategy=strategy,
+                              tile_rows=tile_rows, depth=depth, grid=grid,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "strategy", "tile_rows", "depth", "interpret"))
+def pathfinder(wall, *, strategy=Strategy.DROP_OFF, tile_rows=8, depth=2,
+               interpret=True):
+    return _pf.pathfinder_pallas(wall, strategy=strategy,
+                                 tile_rows=tile_rows, depth=depth,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "penalty", "strategy", "tile_rows", "depth", "interpret"))
+def nw(seq_scores, *, penalty=10, strategy=Strategy.REGISTER_BYPASS,
+       tile_rows=8, depth=2, interpret=True):
+    return _nw.nw_pallas(seq_scores, penalty, strategy=strategy,
+                         tile_rows=tile_rows, depth=depth,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bs", "strategy", "depth", "interpret"))
+def lud(a, *, bs=32, strategy=Strategy.OVERLAP, depth=2, interpret=True):
+    return _lud.lud_pallas(a, bs=bs, strategy=strategy, depth=depth,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "strategy", "bm", "bk", "bn", "depth", "interpret"))
+def matmul(a, b, *, strategy=Strategy.OVERLAP, bm=128, bk=128, bn=128,
+           depth=2, interpret=True):
+    return _mm.matmul_pallas(a, b, strategy=strategy, bm=bm, bk=bk, bn=bn,
+                             depth=depth, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "strategy", "bq", "bk", "depth",
+    "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    strategy=Strategy.OVERLAP, bq=128, bk=128, depth=2,
+                    interpret=True):
+    """q: (..., H, S, D), k/v: (..., KVH, S, D); leading dims are vmapped."""
+    fn = functools.partial(
+        _fa.flash_attention_pallas, causal=causal, window=window,
+        scale=scale, strategy=strategy, bq=bq, bk=bk, depth=depth,
+        interpret=interpret)
+    if q.ndim == 3:
+        return fn(q, k, v)
+    for _ in range(q.ndim - 3):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)

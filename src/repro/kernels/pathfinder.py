@@ -1,0 +1,88 @@
+"""Rodinia Pathfinder (grid DP) as a Pallas TPU kernel.
+
+dst[j] = wall[r, j] + min(prev[j-1], prev[j], prev[j+1]), rows carried
+sequentially.  The row recurrence cannot be parallelised, which is exactly the
+paper's low-occupancy situation: the win comes from prefetching the *next* row
+tile while the current one is folded into the DP state (the paper found this
+benchmark amenable only to the Drop-Off pattern, 1.04-1.11x).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.async_pipeline import (Strategy, TileStream, emit, scratch_for,
+                                   dma_sems)
+
+
+def _min3(prev):
+    # prev: (1, cols); neighbours clamp at the edges
+    left = jnp.concatenate([prev[:, :1], prev[:, :-1]], axis=1)
+    right = jnp.concatenate([prev[:, 1:], prev[:, -1:]], axis=1)
+    return jnp.minimum(prev, jnp.minimum(left, right))
+
+
+def _pathfinder_kernel(wall_hbm, o_hbm, state, row_buf, stage, sems, out_sem,
+                       *, strategy: Strategy, n_tiles: int, tile_rows: int,
+                       depth: int):
+    # row 0 initialises the DP state
+    init = pltpu.make_async_copy(wall_hbm.at[pl.ds(0, 1), :], state, out_sem)
+    init.start()
+    init.wait()
+
+    stream = TileStream(
+        hbm=wall_hbm, vmem=row_buf, sem=sems,
+        index=lambda i: (pl.ds(1 + i * tile_rows, tile_rows), slice(None)),
+        depth=depth)
+
+    def fold(tile):
+        for r in range(tile_rows):          # static unroll; carried dependency
+            state[...] = tile[r:r + 1, :] + _min3(state[...])
+
+    if strategy == Strategy.DROP_OFF:
+        emit(strategy, [stream], n_tiles, lambda i, vals: fold(vals[0]),
+             depth=depth)
+    else:
+        def compute(i, bufs):
+            fold(bufs[0][...])
+        staging = [stage] if strategy == Strategy.SYNC else None
+        emit(strategy, [stream], n_tiles, compute, depth=depth,
+             staging=staging)
+
+    out = pltpu.make_async_copy(state, o_hbm, out_sem)
+    out.start()
+    out.wait()
+
+
+def pathfinder_pallas(wall: jax.Array, *, strategy: Strategy = Strategy.DROP_OFF,
+                      tile_rows: int = 8, depth: int = 2,
+                      interpret: bool = False) -> jax.Array:
+    """wall: (rows, cols); rows-1 must divide by tile_rows.  Returns (1, cols)
+    final DP row."""
+    rows, cols = wall.shape
+    if (rows - 1) % tile_rows:
+        raise ValueError(f"rows-1={rows-1} must divide tile_rows={tile_rows}")
+    n_tiles = (rows - 1) // tile_rows
+    row_buf, sems, d = scratch_for(strategy, (tile_rows, cols), wall.dtype,
+                                   depth=depth)
+    kernel = functools.partial(
+        _pathfinder_kernel, strategy=strategy, n_tiles=n_tiles,
+        tile_rows=tile_rows, depth=d)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1, cols), wall.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((1, cols), wall.dtype),          # DP state
+            row_buf,
+            pltpu.VMEM((tile_rows, cols), wall.dtype),  # sync staging
+            sems,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(wall)

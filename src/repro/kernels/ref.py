@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels/tests assert against
+(``np.testing.assert_allclose``); they are deliberately written in the most
+obvious way, with no tiling or performance tricks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- stream (paper §4.1 microbenchmark) -------------------------------------
+
+def stream_ref(x: jax.Array, iters: int = 1) -> jax.Array:
+    for _ in range(iters):
+        x = x * 0.5 + 0.5
+    return x
+
+
+# --- hotspot (Rodinia 5-point thermal stencil) -------------------------------
+
+def hotspot_ref(temp: jax.Array, power: jax.Array, *, iters: int,
+                rx: float = 0.1, ry: float = 0.1, rz: float = 0.5,
+                cap: float = 0.5) -> jax.Array:
+    """temp, power: (R, C).  Edge cells clamp (replicate padding), matching
+    the Rodinia boundary treatment."""
+    def step(t, _):
+        up = jnp.concatenate([t[:1], t[:-1]], axis=0)
+        down = jnp.concatenate([t[1:], t[-1:]], axis=0)
+        left = jnp.concatenate([t[:, :1], t[:, :-1]], axis=1)
+        right = jnp.concatenate([t[:, 1:], t[:, -1:]], axis=1)
+        delta = cap * (power + (up + down - 2.0 * t) * ry
+                       + (left + right - 2.0 * t) * rx
+                       + (80.0 - t) * rz)
+        return t + delta, None
+    out, _ = jax.lax.scan(step, temp, None, length=iters)
+    return out
+
+
+# --- pathfinder (Rodinia row-wise DP) ----------------------------------------
+
+def pathfinder_ref(wall: jax.Array) -> jax.Array:
+    """wall: (rows, cols) int32 costs.  dst[j] = wall[r,j] + min(prev[j-1],
+    prev[j], prev[j+1]); edges clamp.  Returns the final row of path costs."""
+    def step(prev, row):
+        left = jnp.concatenate([prev[:1], prev[:-1]])
+        right = jnp.concatenate([prev[1:], prev[-1:]])
+        return row + jnp.minimum(prev, jnp.minimum(left, right)), None
+    out, _ = jax.lax.scan(step, wall[0], wall[1:])
+    return out
+
+
+# --- needleman-wunsch (Rodinia NW) -------------------------------------------
+
+def nw_ref(seq_scores: jax.Array, penalty: int) -> jax.Array:
+    """seq_scores: (n, n) similarity matrix (Rodinia precomputes this as
+    reference[i,j]).  Returns the (n+1, n+1) DP table with first row/col
+    initialised to -i*penalty, filled with
+        M[i,j] = max(M[i-1,j-1] + s[i-1,j-1], M[i,j-1] - p, M[i-1,j] - p).
+    Computed anti-diagonally with a scan (still O(n^2) work)."""
+    n = seq_scores.shape[0]
+    m = jnp.zeros((n + 1, n + 1), dtype=seq_scores.dtype)
+    m = m.at[0, :].set(-penalty * jnp.arange(n + 1, dtype=seq_scores.dtype))
+    m = m.at[:, 0].set(-penalty * jnp.arange(n + 1, dtype=seq_scores.dtype))
+
+    def row_step(m, i):
+        def col_step(m, j):
+            v = jnp.maximum(
+                m[i - 1, j - 1] + seq_scores[i - 1, j - 1],
+                jnp.maximum(m[i, j - 1] - penalty, m[i - 1, j] - penalty))
+            return m.at[i, j].set(v), None
+        m, _ = jax.lax.scan(col_step, m, jnp.arange(1, n + 1))
+        return m, None
+    m, _ = jax.lax.scan(row_step, m, jnp.arange(1, n + 1))
+    return m
+
+
+# --- LU decomposition (Rodinia LUD) ------------------------------------------
+
+def lud_ref(a: jax.Array) -> jax.Array:
+    """In-place Doolittle LU (no pivoting), matching Rodinia's lud kernel:
+    returns combined LU matrix where U is the upper triangle (incl. diagonal)
+    and L the strict lower triangle (unit diagonal implied)."""
+    n = a.shape[0]
+    def outer(a, k):
+        pivot = a[k, k]
+        col = jnp.where(jnp.arange(n) > k, a[:, k] / pivot, a[:, k])
+        a = a.at[:, k].set(col)
+        row_mask = (jnp.arange(n)[:, None] > k) & (jnp.arange(n)[None, :] > k)
+        update = jnp.outer(col, a[k, :])
+        a = jnp.where(row_mask, a - update, a)
+        return a, None
+    a, _ = jax.lax.scan(outer, a, jnp.arange(n))
+    return a
+
+
+# --- matmul -------------------------------------------------------------------
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+# --- flash attention ----------------------------------------------------------
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: float | None = None,
+                  window: int = 0) -> jax.Array:
+    """q,k,v: (heads, seq, head_dim) -> (heads, seq, head_dim), fp32 math."""
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+    h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("hqd,hkd->hqk", q * scale, k)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)

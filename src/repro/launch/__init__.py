@@ -1,0 +1,8 @@
+"""Launchers: mesh construction, training driver, serving driver, dry-run.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import — never import it
+from tests or benchmarks; run it as ``python -m repro.launch.dryrun``.
+"""
+from . import mesh
+
+__all__ = ["mesh"]

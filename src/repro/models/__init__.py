@@ -1,0 +1,5 @@
+"""Model stack: one parameterized transformer covering the 10 assigned
+architectures (dense / moe / ssm / hybrid / encdec / vlm)."""
+from .model import Model, build_model, cross_entropy
+
+__all__ = ["Model", "build_model", "cross_entropy"]

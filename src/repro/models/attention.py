@@ -1,0 +1,227 @@
+"""Attention for the distributed model path (pure JAX, compiles on any mesh).
+
+Chunked online-softmax attention bounds activation memory at (S/chunk) x chunk
+logits tiles — the same algorithm as kernels/flash_attention.py but expressed
+in lax.scan so pjit can partition it (the Pallas kernel is the TPU-target
+fast path, validated against the same oracle).
+
+GQA uses an explicit q-head -> kv-head index map, which stays *exact* under
+head padding (padded q heads read some kv head, and their out-projection rows
+are zero-sliced).  Decode supports full and rolling-window KV caches.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.config import ArchConfig
+from ..distributed.sharding import logical
+from .layers import linear, linear_init, padded_heads, rope
+
+NEG = -1e30
+
+
+def kv_index_map(n_heads: int, n_kv: int, h_pad: int) -> np.ndarray:
+    """q head -> kv head (padded q heads clamp to the last kv head)."""
+    group = n_heads // n_kv
+    idx = np.minimum(np.arange(h_pad) // group, n_kv - 1)
+    return idx.astype(np.int32)
+
+
+def attn_init(key, cfg: ArchConfig, *, cross: bool = False):
+    d, hd, nkv = cfg.d_model, cfg.head_dim_, cfg.n_kv_heads
+    hp = padded_heads(cfg)
+    ks = jax.random.split(key, 4)
+    bias = cfg.attn.qkv_bias
+    return {
+        "wq": linear_init(ks[0], d, hp * hd, ("embed", "heads"), bias=bias,
+                          dtype=cfg.param_dtype),
+        "wk": linear_init(ks[1], d, nkv * hd, ("embed", "kv"), bias=bias,
+                          dtype=cfg.param_dtype),
+        "wv": linear_init(ks[2], d, nkv * hd, ("embed", "kv"), bias=bias,
+                          dtype=cfg.param_dtype),
+        "wo": linear_init(ks[3], hp * hd, d, ("heads", "embed"),
+                          scale=1.0 / math.sqrt(hp * hd),
+                          dtype=cfg.param_dtype),
+    }
+
+
+def qkv_project(p, x, cfg: ArchConfig, positions, compute_dtype):
+    """x: (B,S,d) -> q (B,S,Hp,hd), k/v (B,S,KV,hd), rope applied."""
+    b, s, _ = x.shape
+    hd, nkv = cfg.head_dim_, cfg.n_kv_heads
+    hp = padded_heads(cfg)
+    q = linear(p["wq"], x, compute_dtype).reshape(b, s, hp, hd)
+    k = linear(p["wk"], x, compute_dtype).reshape(b, s, nkv, hd)
+    v = linear(p["wv"], x, compute_dtype).reshape(b, s, nkv, hd)
+    q = logical(q, "batch", None, "heads", None)
+    k = logical(k, "batch", None, "kv", None)
+    v = logical(v, "batch", None, "kv", None)
+    if cfg.attn.rope_theta > 0:
+        q = rope(q, positions, cfg.attn.rope_theta)
+        k = rope(k, positions, cfg.attn.rope_theta)
+    return q, k, v
+
+
+class DecodeCache(NamedTuple):
+    """Per-layer-stacked KV cache.  ``k``/``v``: (L, B, W, KV, hd); ``pos``:
+    (L, B, W) absolute position of each slot (-1 = empty).  W is the full
+    sequence budget, or the window size for sliding-window layers."""
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+
+def init_cache(cfg: ArchConfig, batch: int, budget: int,
+               dtype=jnp.bfloat16, n_layers: Optional[int] = None):
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    L = n_layers if n_layers is not None else cfg.n_layers
+    w = min(budget, cfg.attn.window) if cfg.attn.window > 0 else budget
+    shape = (L, batch, w, nkv, hd)
+    return DecodeCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        pos=jnp.full((L, batch, w), -1, jnp.int32),
+    )
+
+
+def cache_spec_axes():
+    return {"k": (None, "batch", None, "kv", None),
+            "v": (None, "batch", None, "kv", None),
+            "pos": (None, "batch", None)}
+
+
+def update_cache_layer(k_layer, v_layer, pos_layer, k_new, v_new, positions):
+    """Insert S new entries at slots positions % W (rolling).
+
+    LOCKSTEP assumption: all sequences in the batch share the same position
+    (static-batch serving, as in launch/serve.py), so the update is ONE
+    contiguous dynamic_update_slice at a scalar start — a per-batch scatter
+    here makes XLA SPMD re-gather the sharded cache (16 GB/chip of temps on
+    decode_32k).  Writes never wrap: prefill fills [0, S) and decode writes
+    a single slot.  positions: (B, S) absolute."""
+    w = k_layer.shape[1]
+    start = positions[0, 0] % w
+    zero = jnp.zeros((), start.dtype)
+    # the update must arrive batch-sharded/kv-replicated like the cache —
+    # otherwise XLA reshards the whole (kvlen-sharded) cache per layer
+    # (an all-to-all of GBs per decode step)
+    k_new = logical(k_new, "batch", None, None, None)
+    v_new = logical(v_new, "batch", None, None, None)
+    k_layer = jax.lax.dynamic_update_slice(
+        k_layer, k_new, (zero, start, zero, zero))
+    v_layer = jax.lax.dynamic_update_slice(
+        v_layer, v_new, (zero, start, zero, zero))
+    pos_layer = jax.lax.dynamic_update_slice(
+        pos_layer, positions, (zero, start))
+    return k_layer, v_layer, pos_layer
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attend_chunked(q, k, v, idx_map, *, causal: bool, window: int,
+                   chunk: int, scale: Optional[float] = None,
+                   global_flag=None):
+    """q: (B,S,Hp,hd); k/v: (B,S,KV,hd).  Scans KV chunks, carrying
+    (m, l, acc) for every query.  ``global_flag`` (scalar bool, may be
+    traced) disables the sliding window for this layer (hymba's hybrid
+    global/local mix inside one scan)."""
+    b, s, hp, hd = q.shape
+    nkv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    chunk = min(chunk, s)
+    while s % chunk:        # largest divisor of s not exceeding the request
+        chunk -= 1
+    n_chunks = s // chunk
+    # matmuls run at the INPUT dtype (bf16 in the model path) with fp32
+    # accumulation — flash-attention numerics; softmax state stays fp32
+    qf = q * jnp.asarray(scale, q.dtype)
+    q_pos = jnp.arange(s, dtype=jnp.int32)
+
+    kc = k.reshape(b, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_ch, v_ch, start = xs
+        k_rep = jnp.take(k_ch, idx_map, axis=2)               # (B,c,Hp,hd)
+        v_rep = jnp.take(v_ch, idx_map, axis=2)
+        logits = jnp.einsum("bqhd,bchd->bhqc", qf, k_rep,
+                            preferred_element_type=jnp.float32)  # (B,Hp,S,c)
+        kv_pos = start + jnp.arange(chunk, dtype=jnp.int32)
+        mask = jnp.ones((s, chunk), dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            wmask = kv_pos[None, :] > q_pos[:, None] - window
+            if global_flag is not None:
+                wmask = wmask | global_flag
+            mask &= wmask
+        logits = jnp.where(mask[None, None], logits, NEG)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))      # (B,Hp,S)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p.astype(v_rep.dtype), v_rep,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hp, s), NEG, jnp.float32)
+    l0 = jnp.zeros((b, hp, s), jnp.float32)
+    a0 = jnp.zeros((b, hp, s, hd), jnp.float32)
+    # checkpoint the KV-chunk body: the (B,H,S,chunk) logits/probs are
+    # recomputed in the backward instead of residual-stacked over chunks
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)          # (B,S,Hp,hd)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token against the cache)
+# ---------------------------------------------------------------------------
+
+def attend_decode(q, k_cache, v_cache, pos_cache, idx_map, *,
+                  q_position, window: int = 0,
+                  scale: Optional[float] = None, global_flag=None):
+    """q: (B,1,Hp,hd); caches: (B,W,KV,hd); pos_cache: (B,W) absolute
+    positions (-1 empty).  q_position: (B,) absolute position of the query."""
+    b, _, hp, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = q[:, 0] * jnp.asarray(scale, q.dtype)                # (B,Hp,hd)
+    k_rep = jnp.take(k_cache, idx_map, axis=2)                # (B,W,Hp,hd)
+    v_rep = jnp.take(v_cache, idx_map, axis=2)
+    # keep the cache-length sharding through the GQA gather (without this
+    # XLA un-shards W and the decode_32k repeat costs 8.6 GB/chip)
+    k_rep = logical(k_rep, "batch", "kvlen", None, None)
+    v_rep = logical(v_rep, "batch", "kvlen", None, None)
+    logits = jnp.einsum("bhd,bwhd->bhw", qf, k_rep,
+                        preferred_element_type=jnp.float32)
+    logits = logical(logits, "batch", None, "kvlen")
+    mask = (pos_cache >= 0) & (pos_cache <= q_position[:, None])
+    if window > 0:
+        wmask = pos_cache > (q_position[:, None] - window)
+        if global_flag is not None:
+            wmask = wmask | global_flag
+        mask &= wmask
+    logits = jnp.where(mask[:, None, :], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhw,bwhd->bhd", p.astype(v_rep.dtype), v_rep,
+                     preferred_element_type=jnp.float32)
+    return out[:, None].astype(q.dtype)                       # (B,1,Hp,hd)
+
+
+def attn_out(p, attn_heads, cfg: ArchConfig, compute_dtype):
+    b, s = attn_heads.shape[:2]
+    flat = attn_heads.reshape(b, s, -1)
+    out = linear(p["wo"], flat, compute_dtype)
+    return logical(out, "batch", None, "residual")

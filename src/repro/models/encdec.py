@@ -1,0 +1,298 @@
+"""Encoder-decoder (whisper-medium backbone).
+
+The audio conv frontend is a stub per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, T_enc, d).  Encoder layers are
+bidirectional self-attention + GELU MLP with layernorm; decoder layers add
+causal self-attention (KV-cached at decode) and cross-attention to the
+encoder output (cross K/V computed once at prefill and carried in the
+state).  Positions are sinusoidal (DESIGN.md §6 notes the learned-positions
+simplification).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.config import ArchConfig
+from ..distributed.sharding import Param, logical, split_tree
+from . import attention as attn
+from .layers import (embed, embed_init, linear, linear_init, mlp, mlp_init,
+                     norm, norm_init, padded_heads, padded_vocab)
+from .transformer import sinusoid, unembed as _unembed_with  # reuse vocab mask
+
+
+class EncDecState(NamedTuple):
+    k: jax.Array          # (Ld, B, W, KV, hd) decoder self-attn cache
+    v: jax.Array
+    kpos: jax.Array
+    xk: jax.Array         # (Ld, B, T_enc, KV, hd) cross-attn keys
+    xv: jax.Array
+    pos: jax.Array        # (B,)
+
+
+def _enc_layer_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": norm_init(cfg.d_model, cfg.norm),
+        "attn": attn.attn_init(ks[0], cfg),
+        "ln_mlp": norm_init(cfg.d_model, cfg.norm),
+        "mlp": mlp_init(ks[1], cfg),
+    }
+
+
+def _dec_layer_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln_self": norm_init(cfg.d_model, cfg.norm),
+        "self": attn.attn_init(ks[0], cfg),
+        "ln_cross": norm_init(cfg.d_model, cfg.norm),
+        "cross": attn.attn_init(ks[1], cfg),
+        "ln_mlp": norm_init(cfg.d_model, cfg.norm),
+        "mlp": mlp_init(ks[2], cfg),
+    }
+
+
+def _stack_init(fn, key, n, cfg):
+    axes_box = {}
+
+    def stripped(k):
+        vals, axes = split_tree(fn(k, cfg))
+        axes_box["axes"] = axes
+        return vals
+
+    vals = jax.vmap(stripped)(jax.random.split(key, n))
+    return jax.tree.map(lambda arr, ax: Param(arr, (None,) + ax),
+                        vals, axes_box["axes"])
+
+
+def encdec_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": embed_init(ks[0], padded_vocab(cfg), cfg.d_model),
+        "enc_layers": _stack_init(_enc_layer_init, ks[1], cfg.n_enc_layers, cfg),
+        "dec_layers": _stack_init(_dec_layer_init, ks[2], cfg.n_layers, cfg),
+        "ln_enc": norm_init(cfg.d_model, cfg.norm),
+        "ln_f": norm_init(cfg.d_model, cfg.norm),
+        "unembed": linear_init(ks[3], cfg.d_model, padded_vocab(cfg),
+                               ("embed", "vocab")),
+    }
+
+
+def _mk_idx(cfg):
+    hp = padded_heads(cfg)
+    return attn.kv_index_map(cfg.n_heads, cfg.n_kv_heads, hp)
+
+
+def encode(params, cfg: ArchConfig, frames, *, remat: bool = True):
+    """frames: (B, T, d) stub embeddings -> (B, T, d)."""
+    cdt = jnp.dtype(cfg.dtype)
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    x = frames.astype(cdt) + sinusoid(positions, cfg.d_model).astype(cdt)
+    x = logical(x, "batch", "seq", "residual")
+    idx = _mk_idx(cfg)
+
+    def layer(x, p):
+        h = norm(p["ln_attn"], x)
+        q, k, v = attn.qkv_project(p["attn"], h, cfg, positions, cdt)
+        o = attn.attend_chunked(q, k, v, idx, causal=False, window=0,
+                                chunk=cfg.attn.chunk)
+        x = x + attn.attn_out(p["attn"], o, cfg, cdt)
+        x = x + mlp(p["mlp"], norm(p["ln_mlp"], x), cfg.act, cdt)
+        return x, None
+
+    f = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else layer
+    x, _ = jax.lax.scan(f, x, params["enc_layers"])
+    return norm(params["ln_enc"], x)
+
+
+def _decoder(params, cfg: ArchConfig, tokens, enc_out, *, mode: str,
+             state: Optional[EncDecState], remat: bool,
+             budget=None):
+    cdt = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    idx = _mk_idx(cfg)
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim_
+
+    if mode == "decode":
+        positions = state.pos[:, None]
+    else:
+        s = tokens.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed(params["embed"], tokens, cdt)
+    x = x + sinusoid(positions, cfg.d_model).astype(cdt)
+
+    if state is None:
+        w = 0 if mode == "train" else max(budget or 0, tokens.shape[1])
+        L = cfg.n_layers
+        t_enc = enc_out.shape[1] if enc_out is not None else 0
+        state = EncDecState(
+            k=jnp.zeros((L, b, w, nkv, hd), cdt),
+            v=jnp.zeros((L, b, w, nkv, hd), cdt),
+            kpos=jnp.full((L, b, w), -1, jnp.int32),
+            xk=jnp.zeros((L, b, t_enc, nkv, hd), cdt),
+            xv=jnp.zeros((L, b, t_enc, nkv, hd), cdt),
+            pos=jnp.zeros((b,), jnp.int32),
+        )
+
+    def layer(x, per):
+        p, cache = per
+        # --- causal self-attention (+ cache)
+        h = norm(p["ln_self"], x)
+        q, k, v = attn.qkv_project(p["self"], h, cfg, positions, cdt)
+        if mode == "decode":
+            ck, cv, cp = attn.update_cache_layer(
+                cache["k"], cache["v"], cache["kp"], k, v, positions)
+            o = attn.attend_decode(q, ck, cv, cp, idx,
+                                   q_position=positions[:, 0])
+            new_cache = dict(cache, k=ck, v=cv, kp=cp)
+        else:
+            o = attn.attend_chunked(q, k, v, idx, causal=True, window=0,
+                                    chunk=cfg.attn.chunk)
+            if mode == "prefill":
+                ck, cv, cp = attn.update_cache_layer(
+                    cache["k"], cache["v"], cache["kp"], k, v, positions)
+                new_cache = dict(cache, k=ck, v=cv, kp=cp)
+            else:
+                new_cache = dict(cache)
+        x = x + attn.attn_out(p["self"], o, cfg, cdt)
+
+        # --- cross-attention
+        h = norm(p["ln_cross"], x)
+        hp = padded_heads(cfg)
+        qx = linear(p["cross"]["wq"], h, cdt).reshape(
+            b, x.shape[1], hp, hd)
+        if mode == "decode":
+            xk, xv = cache["xk"], cache["xv"]
+        else:
+            t_enc = enc_out.shape[1]
+            xk = linear(p["cross"]["wk"], enc_out, cdt).reshape(
+                b, t_enc, nkv, hd)
+            xv = linear(p["cross"]["wv"], enc_out, cdt).reshape(
+                b, t_enc, nkv, hd)
+            if mode == "prefill":
+                new_cache = dict(new_cache, xk=xk, xv=xv)
+        xpos = jnp.broadcast_to(
+            jnp.arange(xk.shape[1], dtype=jnp.int32)[None],
+            (b, xk.shape[1]))
+        if mode == "decode":
+            o = attn.attend_decode(
+                qx, xk, xv, xpos, idx,
+                q_position=jnp.full((b,), 2 ** 30, jnp.int32))
+        else:
+            o = attn.attend_chunked(qx, xk, xv, idx, causal=False, window=0,
+                                    chunk=cfg.attn.chunk)
+        x = x + attn.attn_out(p["cross"], o, cfg, cdt)
+
+        # --- mlp
+        x = x + mlp(p["mlp"], norm(p["ln_mlp"], x), cfg.act, cdt)
+        return x, new_cache
+
+    if mode in ("prefill", "decode"):
+        # serving: self-attn cache is a scan CARRY (in-place DUS); cross
+        # K/V are xs at decode and collected ys at prefill
+        K, V, KP = state.k, state.v, state.kpos
+        L = cfg.n_layers
+        xs = (params["dec_layers"], state.xk, state.xv,
+              jnp.arange(L, dtype=jnp.int32))
+
+        def serve_body(carry, per):
+            x, K, V, KP = carry
+            p_l, xk_l, xv_l, i = per
+            c_l = {
+                "k": jax.lax.dynamic_index_in_dim(K, i, 0, keepdims=False),
+                "v": jax.lax.dynamic_index_in_dim(V, i, 0, keepdims=False),
+                "kp": jax.lax.dynamic_index_in_dim(KP, i, 0, keepdims=False),
+                "xk": xk_l, "xv": xv_l,
+            }
+            x, nc = layer(x, (p_l, c_l))
+            K = jax.lax.dynamic_update_index_in_dim(K, nc["k"], i, 0)
+            V = jax.lax.dynamic_update_index_in_dim(V, nc["v"], i, 0)
+            KP = jax.lax.dynamic_update_index_in_dim(KP, nc["kp"], i, 0)
+            return (x, K, V, KP), (nc["xk"], nc["xv"])
+
+        (x, K, V, KP), (new_xk, new_xv) = jax.lax.scan(
+            serve_body, (x, K, V, KP), xs)
+        logits = _unembed_with({"ln_f": params["ln_f"],
+                                "unembed": params["unembed"],
+                                "embed": params["embed"]}, cfg, x)
+        return logits, EncDecState(k=K, v=V, kpos=KP, xk=new_xk, xv=new_xv,
+                                   pos=positions[:, -1] + 1)
+
+    cache_tree = {"k": state.k, "v": state.v, "kp": state.kpos,
+                  "xk": state.xk, "xv": state.xv}
+    f = jax.checkpoint(layer, policy=jax.checkpoint_policies.nothing_saveable) \
+        if (remat and mode == "train") else layer
+    x, new_cache = jax.lax.scan(f, x, (params["dec_layers"], cache_tree))
+    logits = _unembed_with({"ln_f": params["ln_f"],
+                            "unembed": params["unembed"],
+                            "embed": params["embed"]}, cfg, x)
+    new_state = EncDecState(
+        k=new_cache["k"], v=new_cache["v"], kpos=new_cache["kp"],
+        xk=new_cache["xk"], xv=new_cache["xv"], pos=positions[:, -1] + 1)
+    return logits, new_state
+
+
+def encdec_state_init(cfg: ArchConfig, batch: int, budget: int, t_enc: int,
+                      dtype=jnp.bfloat16) -> EncDecState:
+    """Fresh decode state (used to lower serve_step without a prefill)."""
+    L, nkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
+    return EncDecState(
+        k=jnp.zeros((L, batch, budget, nkv, hd), dtype),
+        v=jnp.zeros((L, batch, budget, nkv, hd), dtype),
+        kpos=jnp.full((L, batch, budget), -1, jnp.int32),
+        xk=jnp.zeros((L, batch, t_enc, nkv, hd), dtype),
+        xv=jnp.zeros((L, batch, t_enc, nkv, hd), dtype),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def encdec_state_axes() -> EncDecState:
+    return EncDecState(
+        k=(None, "batch", "kvlen", "kv", None),
+        v=(None, "batch", "kvlen", "kv", None),
+        kpos=(None, "batch", "kvlen"),
+        xk=(None, "batch", None, "kv", None),
+        xv=(None, "batch", None, "kv", None),
+        pos=("batch",),
+    )
+
+
+def build_encdec(cfg: ArchConfig):
+    from .model import Model, cross_entropy
+
+    def init(key):
+        return encdec_init(key, cfg)
+
+    def loss(params, batch, *, remat: bool = True):
+        enc_out = encode(params, cfg, batch["frames"], remat=remat)
+        logits, _ = _decoder(params, cfg, batch["tokens"], enc_out,
+                             mode="train", state=None, remat=remat)
+        total, n = cross_entropy(logits, batch["labels"], cfg.vocab)
+        ce = total / jnp.maximum(n, 1)
+        return ce, {"ce": ce, "aux": jnp.zeros(()), "tokens": n}
+
+    def forward(params, batch):
+        enc_out = encode(params, cfg, batch["frames"], remat=False)
+        logits, _ = _decoder(params, cfg, batch["tokens"], enc_out,
+                             mode="train", state=None, remat=False)
+        return logits
+
+    def prefill(params, batch, budget=None):
+        enc_out = encode(params, cfg, batch["frames"], remat=False)
+        logits, state = _decoder(params, cfg, batch["tokens"], enc_out,
+                                 mode="prefill", state=None, remat=False,
+                                 budget=budget)
+        return logits[:, -1], state
+
+    def decode_step(params, state, tokens):
+        logits, state = _decoder(params, cfg, tokens, None, mode="decode",
+                                 state=state, remat=False)
+        return logits[:, -1], state
+
+    return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                 decode_step=decode_step, forward=forward)

@@ -1,0 +1,95 @@
+"""Public model API: build_model(cfg) -> Model.
+
+Model is a thin namespace of pure functions over plain param pytrees:
+  init(key)                      -> annotated params (Param leaves)
+  loss(params, batch)            -> (scalar loss, metrics dict)
+  prefill(params, batch)         -> (last-token logits, State)
+  decode_step(params, state, t)  -> (logits, State)
+
+``batch`` is a dict: tokens (B,S) int32, labels (B,S) int32 (-1 = masked),
+and optionally patches/frames (B,P,d) for the vlm/audio stubs.  The loss is
+vocab-parallel: the (B,S,V) logits stay sharded over the "vocab" axis and the
+reduction happens on the sharded dim (never materialising a replicated 4 GB
+logits tensor for 256k vocabs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.config import ArchConfig
+from ..distributed.sharding import logical, split_tree
+from . import encdec as encdec_mod
+from . import transformer as tfm
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """logits: (B,S,Vp) fp32 vocab-sharded; labels: (B,S) with -1 masked.
+    Returns (sum_loss, n_tokens)."""
+    lmax = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - lmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + lmax[..., 0]
+    safe_labels = jnp.maximum(labels, 0)
+    lbl = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < vocab)
+    losses = jnp.where(mask, lse - lbl, 0.0)
+    return jnp.sum(losses), jnp.sum(mask)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    forward: Callable
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encdec:
+        return encdec_mod.build_encdec(cfg)
+
+    def init(key):
+        return tfm.transformer_init(key, cfg)
+
+    def loss(params, batch, *, remat: bool = True):
+        patches = batch.get("patches")
+        logits, _, aux = tfm.forward(
+            params, cfg, batch["tokens"], patches=patches, mode="train",
+            remat=remat)
+        labels = batch["labels"]
+        if patches is not None and cfg.n_patches > 0:
+            # patch positions carry no LM loss
+            pad = jnp.full(labels.shape[:1] + (cfg.n_patches,), -1,
+                           labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        total, n = cross_entropy(logits, labels, cfg.vocab)
+        ce = total / jnp.maximum(n, 1)
+        aux_w = cfg.moe.router_aux_weight if cfg.moe.enabled else 0.0
+        metrics = {"ce": ce, "aux": aux, "tokens": n}
+        return ce + aux_w * aux, metrics
+
+    def forward(params, batch):
+        logits, _, _ = tfm.forward(
+            params, cfg, batch["tokens"], patches=batch.get("patches"),
+            mode="train", remat=False)
+        return logits
+
+    def prefill(params, batch, budget=None):
+        logits, state, _ = tfm.forward(
+            params, cfg, batch["tokens"], patches=batch.get("patches"),
+            mode="prefill", budget=budget)
+        return logits[:, -1], state
+
+    def decode_step(params, state, tokens):
+        """tokens: (B, 1) int32 -> (logits (B, vocab_p), new state)."""
+        logits, state, _ = tfm.forward(
+            params, cfg, tokens, mode="decode", state=state)
+        return logits[:, -1], state
+
+    return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                 decode_step=decode_step, forward=forward)

@@ -1,0 +1,5 @@
+from .adamw import (AdamWState, adamw_init, adamw_update, global_norm,
+                    lr_schedule, moment_shardings, zero1_spec)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm",
+           "lr_schedule", "moment_shardings", "zero1_spec"]

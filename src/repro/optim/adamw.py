@@ -1,0 +1,117 @@
+"""AdamW with global-norm clipping and ZeRO-1 moment sharding.
+
+The moments (m, v) dominate optimizer memory (2x params fp32).  With ZeRO-1
+enabled they are additionally sharded over the data axes — the update is
+elementwise, so any sharding of the moments is valid; XLA inserts the
+(reduce-)scatter/gather around the update automatically.  For qwen3-moe-235b
+this is the difference between 7.1 GB and 0.44 GB of moments per chip.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import ShardingRules
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda t: jnp.zeros_like(t, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(t.astype(jnp.float32)))
+                        for t in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """lr may be a scalar array (schedule evaluated outside)."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    if clip_norm > 0:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m2 / c1
+        vh = v2 / c2
+        step_v = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_v).astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(step, new_m, new_v), gn
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding for the moments
+# ---------------------------------------------------------------------------
+
+def zero1_spec(axes: Tuple, shape: Tuple[int, ...], rules: ShardingRules):
+    """Insert the data axes into the first unsharded, divisible dim of the
+    param's spec — the ZeRO-1 placement for its moments."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from ..distributed.sharding import safe_spec
+    base = list(safe_spec(rules, axes, shape))
+    data_axes = rules.rules.get("batch")
+    if data_axes is None:
+        return P(*base)
+    if isinstance(data_axes, str):
+        data_axes = (data_axes,)
+    dsize = int(np.prod([rules.mesh.shape[a] for a in data_axes]))
+    used = set()
+    for spec in base:
+        for a in (spec if isinstance(spec, tuple) else (spec,)):
+            if a is not None:
+                used.add(a)
+    if not any(a in used for a in data_axes):
+        for i, (spec, dim) in enumerate(zip(base, shape)):
+            if spec is None and dim % dsize == 0 and dim > 0:
+                base[i] = tuple(data_axes) if len(data_axes) > 1 \
+                    else data_axes[0]
+                break
+    return P(*base)
+
+
+def moment_shardings(axes_tree, shapes_tree, rules: ShardingRules):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda ax, shp: NamedSharding(
+            rules.mesh, zero1_spec(ax, shp.shape, rules)),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def lr_schedule(step, *, lr: float, warmup: int, total: int,
+                min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to min_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)

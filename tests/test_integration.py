@@ -1,0 +1,137 @@
+"""End-to-end integration: training descends, checkpoint-resume is exact,
+preemption saves restartable state, and the serving loop emits tokens that
+match teacher forcing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.core.config import ArchConfig, AttnConfig, RunConfig
+from repro.data import synth_batch
+from repro.distributed.sharding import split_tree
+from repro.launch.serve import Request, ServingLoop
+from repro.launch.train import train_loop, build_train_step, set_param_axes
+from repro.models import build_model
+from repro.optim import adamw_init
+
+
+def _cfg(vocab=64):
+    return ArchConfig(name="it", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=vocab,
+                      attn=AttnConfig(chunk=16))
+
+
+def test_training_descends():
+    run = RunConfig(lr=3e-3, warmup_steps=3, total_steps=40, zero1=False)
+    _, _, history = train_loop(_cfg(), run, steps=40, batch=8, seq=32)
+    first = float(np.mean(history[:5]))
+    last = float(np.mean(history[-5:]))
+    assert last < first - 0.2, (first, last)
+
+
+def test_checkpoint_resume_is_exact(tmp_path):
+    """Training N steps straight == training k, restarting, training N-k."""
+    cfg = _cfg()
+    run = RunConfig(lr=1e-3, warmup_steps=2, total_steps=20, zero1=False)
+
+    p_straight, _, _ = train_loop(cfg, run, steps=10, batch=4, seq=32)
+
+    d = str(tmp_path / "ck")
+    train_loop(cfg, run, steps=6, batch=4, seq=32, ckpt_dir=d)
+    p_resumed, _, _ = train_loop(cfg, run, steps=10, batch=4, seq=32,
+                                 ckpt_dir=d, resume=True)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6),
+        p_straight, p_resumed)
+
+
+def test_grad_accumulation_matches_single_batch():
+    """A=4 microbatches must produce (nearly) the same update as A=1."""
+    cfg = _cfg()
+    model = build_model(cfg)
+    params, axes = split_tree(model.init(jax.random.PRNGKey(0)))
+    set_param_axes(axes)
+    batch = {k: jnp.asarray(v) for k, v in
+             synth_batch(cfg, batch=8, seq=32, seed=0, step=0).items()}
+    outs = {}
+    for a in (1, 4):
+        run = RunConfig(microbatches=a, zero1=False, clip_norm=0.0,
+                        warmup_steps=1, total_steps=10)
+        step = jax.jit(build_train_step(model, run))
+        opt = adamw_init(params)
+        new_p, _, m = step(params, opt, batch, jnp.zeros((), jnp.int32))
+        outs[a] = (new_p, float(m["ce"]), float(m["grad_norm"]))
+    # loss and gradient norm agree (AdamW's step-1 sign amplification makes
+    # raw param comparison meaningless at fp32 noise level)
+    assert abs(outs[1][1] - outs[4][1]) < 5e-3
+    assert abs(outs[1][2] - outs[4][2]) / outs[1][2] < 1e-2
+    # update magnitudes agree in aggregate
+    d1 = jnp.sqrt(sum(jnp.sum((a_ - b_) ** 2) for a_, b_ in zip(
+        jax.tree.leaves(outs[1][0]), jax.tree.leaves(params))))
+    d4 = jnp.sqrt(sum(jnp.sum((a_ - b_) ** 2) for a_, b_ in zip(
+        jax.tree.leaves(outs[4][0]), jax.tree.leaves(params))))
+    assert abs(float(d1) - float(d4)) / float(d1) < 0.05
+
+
+def test_bf16_grad_compression_close_to_fp32():
+    cfg = _cfg()
+    model = build_model(cfg)
+    params, axes = split_tree(model.init(jax.random.PRNGKey(0)))
+    set_param_axes(axes)
+    batch = {k: jnp.asarray(v) for k, v in
+             synth_batch(cfg, batch=8, seq=32, seed=0, step=0).items()}
+    outs = {}
+    for comp in ("none", "bf16"):
+        run = RunConfig(microbatches=4, zero1=False, grad_compression=comp,
+                        warmup_steps=1, total_steps=10)
+        step = jax.jit(build_train_step(model, run))
+        new_p, _, m = step(params, adamw_init(params), batch,
+                           jnp.zeros((), jnp.int32))
+        outs[comp] = float(m["ce"])
+    assert abs(outs["none"] - outs["bf16"]) < 2e-2
+
+
+def test_serving_loop_matches_greedy_teacher_forcing():
+    cfg = _cfg(vocab=128)
+    model = build_model(cfg)
+    params, _ = split_tree(model.init(jax.random.PRNGKey(1)))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32)
+
+    loop = ServingLoop(cfg, params, batch=2)
+    reqs = [Request(uid=i, prompt=prompts[i], max_new=4) for i in range(2)]
+    results = loop.run(reqs, temperature=0.0)
+
+    # greedy reference: extend each prompt token by token via forward
+    for i in range(2):
+        toks = list(prompts[i])
+        for _ in range(4):
+            logits = model.forward(
+                params, {"tokens": jnp.asarray([toks]),
+                         "labels": jnp.zeros((1, len(toks)), jnp.int32)})
+            nxt = int(jnp.argmax(logits[0, -1, :cfg.vocab]))
+            toks.append(nxt)
+        assert results[i] == toks[len(prompts[i]):], i
+
+
+def test_elastic_restore_across_logical_meshes(tmp_path):
+    """Save unsharded, restore under explicit (new-mesh) shardings, and keep
+    training — the elastic-scaling path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    cfg = _cfg()
+    model = build_model(cfg)
+    params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, {"params": params})
+
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), {"params": params})
+    restored = ck.restore({"params": params}, shardings=sh)
+    batch = {k: jnp.asarray(v) for k, v in
+             synth_batch(cfg, batch=2, seq=16, seed=0, step=5).items()}
+    loss, _ = model.loss(restored["params"], batch)
+    assert bool(jnp.isfinite(loss))

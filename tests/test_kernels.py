@@ -1,0 +1,161 @@
+"""Per-kernel correctness: every Pallas kernel, swept over shapes/dtypes and
+strategies, asserted allclose against the pure-jnp oracle in kernels/ref.py
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Strategy
+from repro.kernels import ops, ref
+
+STRATEGIES = list(Strategy)
+
+
+def key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+# ---------------------------------------------------------------------------
+# stream (paper §4.1 microbenchmark)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("shape,tile_rows,n_tiles", [
+    ((64, 128), 8, 4),
+    ((128, 256), 16, 4),
+    ((96, 128), 8, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stream(strategy, shape, tile_rows, n_tiles, dtype):
+    if shape[0] % (tile_rows * n_tiles):
+        pytest.skip("shape not divisible")
+    x = jax.random.uniform(key(0), shape, jnp.float32).astype(dtype)
+    got = ops.stream(x, iters=3, strategy=strategy, tile_rows=tile_rows,
+                     n_tiles=n_tiles)
+    want = ref.stream_ref(x.astype(jnp.float32), 3)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), want, rtol=tol,
+                               atol=tol)
+
+
+@pytest.mark.parametrize("depth", [2, 3, 4])
+def test_stream_depths(depth):
+    x = jax.random.uniform(key(1), (64, 128), jnp.float32)
+    got = ops.stream(x, iters=2, strategy=Strategy.OVERLAP, depth=depth)
+    np.testing.assert_allclose(got, ref.stream_ref(x, 2), rtol=1e-6)
+
+
+def test_stream_zero_iters():
+    x = jax.random.uniform(key(2), (32, 128), jnp.float32)
+    got = ops.stream(x, iters=0)
+    np.testing.assert_allclose(got, x, rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# hotspot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("shape,grid", [((64, 126), 2), ((32, 128), 1)])
+def test_hotspot(strategy, shape, grid):
+    k1, k2 = jax.random.split(key(3))
+    temp = jax.random.uniform(k1, shape, jnp.float32) * 100 + 300
+    power = jax.random.uniform(k2, shape, jnp.float32)
+    got = ops.hotspot(temp, power, iters=2, strategy=strategy, grid=grid)
+    want = ref.hotspot_ref(temp, power, iters=2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# pathfinder
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("rows,cols", [(33, 128), (17, 256)])
+def test_pathfinder(strategy, rows, cols):
+    wall = jax.random.randint(key(4), (rows, cols), 0, 10, jnp.int32)
+    got = ops.pathfinder(wall, strategy=strategy)
+    want = ref.pathfinder_ref(wall)
+    np.testing.assert_array_equal(np.asarray(got)[0], want)
+
+
+# ---------------------------------------------------------------------------
+# needleman-wunsch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("n,penalty", [(32, 10), (64, 3)])
+def test_nw(strategy, n, penalty):
+    scores = jax.random.randint(key(5), (n, n), -3, 4).astype(jnp.float32)
+    got = ops.nw(scores, penalty=penalty, strategy=strategy)
+    want = ref.nw_ref(scores, penalty)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LUD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("n,bs", [(64, 32), (128, 32)])
+def test_lud(strategy, n, bs):
+    a = jax.random.normal(key(6), (n, n), jnp.float32) + n * jnp.eye(n)
+    got = np.asarray(ops.lud(a, bs=bs, strategy=strategy))
+    want = ref.lud_ref(a)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # reconstruction: L @ U == A
+    L = np.tril(got, -1) + np.eye(n)
+    U = np.triu(got)
+    np.testing.assert_allclose(L @ U, np.asarray(a), rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul(strategy, m, k, n, dtype):
+    a = jax.random.normal(key(7), (m, k)).astype(dtype)
+    b = jax.random.normal(key(8), (k, n)).astype(dtype)
+    got = ops.matmul(a, b, strategy=strategy, depth=3)
+    want = ref.matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy",
+                         [Strategy.OVERLAP, Strategy.SYNC, Strategy.DROP_OFF])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 256)])
+@pytest.mark.parametrize("h,kvh", [(4, 2), (4, 4), (8, 1)])
+def test_flash_attention(strategy, causal, window, h, kvh):
+    s, d = 256, 64
+    ks = jax.random.split(key(9), 3)
+    q = jax.random.normal(ks[0], (h, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (kvh, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (kvh, s, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              strategy=strategy, bq=128, bk=128)
+    kr = jnp.repeat(k, h // kvh, axis=0)
+    vr = jnp.repeat(v, h // kvh, axis=0)
+    want = ref.attention_ref(q, kr, vr, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_batched():
+    b, h, s, d = 2, 4, 256, 64
+    ks = jax.random.split(key(10), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, 2, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, 2, s, d), jnp.float32)
+    got = ops.flash_attention(q, k, v)
+    for i in range(b):
+        want = ref.attention_ref(q[i], jnp.repeat(k[i], 2, 0),
+                                 jnp.repeat(v[i], 2, 0))
+        np.testing.assert_allclose(got[i], want, rtol=2e-5, atol=2e-5)

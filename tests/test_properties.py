@@ -1,0 +1,134 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balance, hardware
+from repro.core.config import ArchConfig, AttnConfig
+from repro.data import synth_batch
+from repro.kernels import ops, ref
+from repro.core.async_pipeline import Strategy
+
+SET = settings(max_examples=20, deadline=None)
+
+
+# --- stream kernel: closed form (0.5x + 0.5)^n -> fixed point 1 -------------
+
+@SET
+@given(iters=st.integers(0, 12),
+       seed=st.integers(0, 2 ** 16),
+       strategy=st.sampled_from(list(Strategy)))
+def test_stream_closed_form(iters, seed, strategy):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (32, 128), jnp.float32)
+    got = np.asarray(ops.stream(x, iters=iters, strategy=strategy))
+    # closed form: f^n(x) = 2^-n x + (1 - 2^-n)
+    a = 0.5 ** iters
+    np.testing.assert_allclose(got, a * np.asarray(x) + (1 - a), rtol=1e-5,
+                               atol=1e-6)
+    assert got.min() >= min(float(x.min()), 1.0) - 1e-6   # contraction to 1
+
+
+# --- pathfinder: DP result bounded by row sums -------------------------------
+
+@SET
+@given(seed=st.integers(0, 2 ** 16))
+def test_pathfinder_bounds(seed):
+    wall = jax.random.randint(jax.random.PRNGKey(seed), (17, 128), 0, 10,
+                              jnp.int32)
+    out = np.asarray(ops.pathfinder(wall))[0]
+    # any path sums rows-many values in [0, 9]
+    assert out.min() >= int(np.asarray(wall)[0].min())
+    assert out.max() <= 9 * 17
+    # monotone: adding a constant to the wall shifts the result exactly
+    out2 = np.asarray(ops.pathfinder(wall + 1))[0]
+    np.testing.assert_array_equal(out2, out + 17)
+
+
+# --- expected speedup: min property + identity -------------------------------
+
+@SET
+@given(a=st.sampled_from(list(hardware.CATALOG)),
+       b=st.sampled_from(list(hardware.CATALOG)))
+def test_expected_speedup_properties(a, b):
+    ca, cb = hardware.get_chip(a), hardware.get_chip(b)
+    if ca.tflops_f32 == 0 or ca.mem_bw_gbs == 0:
+        return
+    t = balance.expected_speedup(ca, cb)
+    assert t <= cb.tflops_f32 / ca.tflops_f32 + 1e-9
+    assert t <= cb.mem_bw_gbs / ca.mem_bw_gbs + 1e-9
+    assert balance.expected_speedup(ca, ca) == 1.0
+
+
+# --- roofline attainable performance is monotone in intensity ----------------
+
+@SET
+@given(i1=st.floats(0.01, 1000), i2=st.floats(0.01, 1000))
+def test_roofline_monotone(i1, i2):
+    chip = hardware.get_chip("A100")
+    lo, hi = min(i1, i2), max(i1, i2)
+    assert balance.attainable_flops(lo, chip) <= \
+        balance.attainable_flops(hi, chip) + 1e-6
+
+
+# --- data pipeline: determinism + label shift over arbitrary params ----------
+
+@SET
+@given(seed=st.integers(0, 2 ** 20), step=st.integers(0, 10 ** 6),
+       batch=st.integers(1, 4))
+def test_synth_batch_properties(seed, step, batch):
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=16,
+                     n_heads=2, n_kv_heads=2, d_ff=32, vocab=251,
+                     attn=AttnConfig(chunk=8))
+    b1 = synth_batch(cfg, batch=batch, seq=16, seed=seed, step=step)
+    b2 = synth_batch(cfg, batch=batch, seq=16, seed=seed, step=step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < cfg.vocab
+
+
+# --- attention: chunk-size invariance ----------------------------------------
+
+@SET
+@given(seed=st.integers(0, 2 ** 16), chunk=st.sampled_from([4, 8, 16, 32]))
+def test_attention_chunk_invariance(seed, chunk):
+    from repro.models import attention as attn
+    b, s, h, d = 1, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    idx = attn.kv_index_map(h, h, h)
+    a1 = attn.attend_chunked(q, k, v, idx, causal=True, window=0, chunk=chunk)
+    a2 = attn.attend_chunked(q, k, v, idx, causal=True, window=0, chunk=s)
+    np.testing.assert_allclose(a1, a2, rtol=2e-5, atol=2e-5)
+
+
+# --- NW max-plus scan: result invariant to tile_rows --------------------------
+
+@SET
+@given(seed=st.integers(0, 2 ** 16),
+       tile_rows=st.sampled_from([4, 8, 16]))
+def test_nw_tile_invariance(seed, tile_rows):
+    n = 32
+    scores = jax.random.randint(jax.random.PRNGKey(seed), (n, n), -3,
+                                4).astype(jnp.float32)
+    got = ops.nw(scores, penalty=5, tile_rows=tile_rows)
+    want = ref.nw_ref(scores, 5)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+# --- zero1 spec: inserts data axes only once, only when divisible -------------
+
+@SET
+@given(dim0=st.integers(1, 64), dim1=st.integers(1, 64))
+def test_zero1_spec_valid(dim0, dim1):
+    from repro.optim import zero1_spec
+    from repro.distributed.sharding import ShardingRules
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rules = ShardingRules(mesh, {"batch": ("data",), "mlp": None})
+    spec = zero1_spec(("mlp", None), (dim0, dim1), rules)
+    flat = [a for s in spec for a in
+            ((s,) if not isinstance(s, tuple) else s) if a]
+    assert len(flat) == len(set(flat))      # no duplicate mesh axes
