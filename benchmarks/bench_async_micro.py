@@ -22,21 +22,14 @@ from repro.kernels.stream import stream_flops_bytes
 # register_bypass: sync minus the staging pass through VMEM
 # drop_off: overlap at chunk granularity (smaller fill, more per-chunk
 #           issue overhead)
+# The single implementation lives in repro.tuning.search_space so the
+# benchmark's "expectation" and the autotuner's pruning can never diverge.
 
 def model_time(strategy: Strategy, flops: float, nbytes: float,
                depth: int = 2, n_tiles: int = 64) -> float:
-    t_c = flops / hardware.PEAK_FLOPS
-    t_m = nbytes / hardware.HBM_BW
-    issue = 1e-6 * n_tiles          # DMA issue overhead per tile
-    if strategy == Strategy.SYNC:
-        return t_m * 1.5 + t_c + issue        # staging re-pass through VMEM
-    if strategy == Strategy.REGISTER_BYPASS:
-        return t_m + t_c + issue
-    if strategy == Strategy.OVERLAP:
-        fill = (t_m / n_tiles) * (depth - 1)
-        return max(t_m, t_c) + fill + issue
-    fill = (t_m / n_tiles) / 4
-    return max(t_m, t_c) + fill + 4 * issue   # drop_off: chunked issue
+    from repro.tuning.search_space import predict_time
+    return predict_time(strategy, flops, nbytes, depth=depth,
+                        n_tiles=n_tiles, chip=hardware.TARGET)
 
 
 def run(report):

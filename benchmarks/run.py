@@ -1,19 +1,26 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3] [--json out.json]
 
-Output: ``section`` headers + ``name,us_per_call,derived...`` CSV rows.
+Output: ``section`` headers + ``name,us_per_call,derived...`` CSV rows to
+stdout; ``--json`` additionally writes every Report row machine-readable
+(the feed format for the tuning registry and BENCH_*.json trajectories).
 """
 import argparse
+import json
 import sys
 import time
+
+REPORT_SCHEMA_VERSION = 1
 
 
 class Report:
     def __init__(self):
         self.rows = []
+        self._section = ""
 
     def section(self, title):
+        self._section = title
         print(f"\n## {title}", flush=True)
 
     def note(self, text):
@@ -22,23 +29,34 @@ class Report:
     def row(self, table, name, **kv):
         parts = [f"{k}={v}" for k, v in kv.items()]
         print(f"{table},{name}," + ",".join(parts), flush=True)
-        self.rows.append((table, name, kv))
+        self.rows.append((table, name, kv, self._section))
+
+    def to_json(self) -> dict:
+        return {
+            "schema_version": REPORT_SCHEMA_VERSION,
+            "rows": [{"table": t, "name": n, "section": s, "metrics": kv}
+                     for t, n, kv, s in self.rows],
+        }
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter over benchmark module names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all Report rows as JSON to PATH "
+                         "('-' for stdout)")
     args = ap.parse_args(argv)
 
-    from . import (bench_async_apps, bench_async_micro, bench_balance,
-                   bench_generations, roofline_table)
+    from . import (bench_async_apps, bench_async_micro, bench_autotune,
+                   bench_balance, bench_generations, roofline_table)
     benches = [
         ("bench_balance(Fig1+S6)", bench_balance.run),
         ("bench_generations(Fig2)", bench_generations.run),
         ("bench_async_micro(Fig3)", bench_async_micro.run),
         ("bench_async_apps(Fig4)", bench_async_apps.run),
         ("roofline_table(SSRoofline)", roofline_table.run),
+        ("bench_autotune(Tuning)", bench_autotune.run),
     ]
     report = Report()
     t00 = time.time()
@@ -50,6 +68,15 @@ def main(argv=None):
         fn(report)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
     print(f"\n# all benchmarks done in {time.time()-t00:.1f}s")
+    if args.json:
+        payload = report.to_json()
+        if args.json == "-":
+            json.dump(payload, sys.stdout, indent=1)
+            sys.stdout.write("\n")
+        else:
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=1)
+            print(f"# wrote {len(payload['rows'])} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Quickstart: build a model from an assigned architecture config, run a
-forward pass, take one training step, then prefill + decode a few tokens.
+forward pass, take one training step, prefill + decode a few tokens, then
+autotune a Pallas kernel and reuse the cached winner.
 
     PYTHONPATH=src python examples/quickstart.py [--arch qwen2-1.5b]
 """
@@ -63,6 +64,30 @@ def main():
         lg, state = jax.jit(model.decode_step)(params, state,
                                                t.astype(jnp.int32))
     print("decoded:", jnp.concatenate(toks, 1).tolist())
+
+    # --- Autotuning ---------------------------------------------------------
+    # The async-copy strategy / ring depth / tile shape of every Pallas
+    # kernel are searched empirically and cached in a persistent registry
+    # (schema-versioned JSON).  First call measures; every later run — and
+    # serve.py / train.py at startup — reuses the cached winner.
+    import tempfile
+    from repro.kernels import ops
+    from repro.tuning import Autotuner, Registry, default_task, tuned
+
+    registry = Registry(os.path.join(tempfile.mkdtemp(), "registry.json"))
+    task = default_task("stream", shape=(64, 128))
+    rec = Autotuner(registry, repeats=2).tune(task)
+    strat = rec.best["strategy"]
+    print(f"autotune: stream best={strat} "
+          f"{rec.best_us:.0f}us ({rec.speedup_vs_default:.2f}x vs default, "
+          f"{rec.n_candidates} measured / {rec.n_pruned} pruned "
+          f"analytically)")
+    cfg = tuned("stream", (64, 128), registry=registry)   # cache hit
+    x = jax.random.uniform(jax.random.PRNGKey(0), (64, 128), jnp.float32)
+    y = ops.stream(x, iters=4, **cfg)
+    print(f"autotune: tuned stream call ok, out={y.shape}; registry at "
+          f"{registry.path}")
+    # CLI equivalent:  python -m repro.tuning.cli tune --kernel stream
 
 
 if __name__ == "__main__":

@@ -35,6 +35,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+# jax renamed pltpu.TPUCompilerParams -> CompilerParams around 0.5; kernels
+# build their compiler_params through this alias so either version works.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(*, dimension_semantics: Tuple[str, ...]):
+    return CompilerParams(dimension_semantics=dimension_semantics)
+
+
 class Strategy(enum.Enum):
     SYNC = "sync"
     REGISTER_BYPASS = "register_bypass"

@@ -18,7 +18,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.async_pipeline import (Strategy, TileStream, emit, scratch_for,
-                                   dma_sems)
+                                   dma_sems, compiler_params)
 
 NEG_INF = -1e30
 
@@ -138,6 +138,6 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.SemaphoreType.DMA,
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(q, k, v)

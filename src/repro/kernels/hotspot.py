@@ -16,7 +16,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.async_pipeline import (Strategy, TileStream, WriteBack, emit,
-                                   scratch_for, ring_scratch, dma_sems)
+                                   scratch_for, ring_scratch, dma_sems,
+                                   compiler_params)
 
 OUT_DEPTH = 2
 
@@ -107,7 +108,7 @@ def hotspot_step_pallas(temp: jax.Array, power: jax.Array, *,
             t_sems, p_sems, dma_sems(OUT_DEPTH),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("arbitrary",)),
     )(tpad, power)
 

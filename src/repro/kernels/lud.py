@@ -21,7 +21,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.async_pipeline import (Strategy, TileStream, WriteBack, emit,
-                                   scratch_for, ring_scratch, dma_sems)
+                                   scratch_for, ring_scratch, dma_sems,
+                                   compiler_params)
 
 OUT_DEPTH = 2
 
@@ -179,7 +180,7 @@ def lud_internal(l_strip: jax.Array, u_strip: jax.Array, c: jax.Array, *,
             u_sems, c_sems, dma_sems(OUT_DEPTH),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("arbitrary",)),
     )(l_strip, u_strip, c)
 
@@ -192,7 +193,8 @@ def lud_pallas(a: jax.Array, *, bs: int = 32,
     """Blocked LU of (n, n) with n % bs == 0.  Returns the combined LU matrix
     (matches ref.lud_ref)."""
     n = a.shape[0]
-    assert n % bs == 0, (n, bs)
+    if n % bs or bs > n:
+        raise ValueError(f"n={n} not divisible by block size bs={bs}")
     nb = n // bs
     for k in range(nb):
         lo, hi = k * bs, (k + 1) * bs

@@ -19,7 +19,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.async_pipeline import (Strategy, TileStream, emit, scratch_for,
-                                   dma_sems)
+                                   dma_sems, compiler_params)
 
 
 def _matmul_kernel(a_hbm, b_hbm, o_hbm, a_buf, b_buf, acc, a_stage, b_stage,
@@ -90,7 +90,7 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *,
             pltpu.SemaphoreType.DMA,
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
     )(a, b)
 

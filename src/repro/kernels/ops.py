@@ -5,11 +5,18 @@ wrapper accepts ``strategy`` (the paper's async-copy pattern), is jitted with
 the structural arguments static, and has a matching oracle in ``ref.py``.
 ``interpret=True`` (default on this CPU container) runs the kernel bodies in
 Python via the Pallas interpreter; on a real TPU pass ``interpret=False``.
+
+Config constants are NOT hard-coded per call site: each kernel's tunable
+parameters live in ``KERNEL_DEFAULTS`` and any omitted (None) keyword falls
+back to that table.  The autotuner (``repro.tuning``) overwrites the table
+via ``set_default_config`` with registry winners, so tuned configs flow to
+every caller without touching call sites; explicit keywords still win.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import logging
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -23,76 +30,208 @@ from . import nw as _nw
 from . import pathfinder as _pf
 from . import stream as _st
 
+log = logging.getLogger("repro.kernels")
+
 __all__ = [
     "stream", "hotspot", "pathfinder", "nw", "lud", "matmul",
-    "flash_attention", "Strategy",
+    "flash_attention", "Strategy", "KERNEL_DEFAULTS", "default_config",
+    "seed_default_config", "set_default_config", "reset_default_configs",
 ]
 
 
+#: The single source of per-kernel tunable constants (the seed's hard-coded
+#: values).  ``repro.tuning.apply_registry_defaults`` replaces entries with
+#: empirically-tuned winners.
+KERNEL_DEFAULTS: Dict[str, Dict[str, Any]] = {
+    "stream": dict(strategy=Strategy.OVERLAP, tile_rows=8, n_tiles=4,
+                   depth=2),
+    "hotspot": dict(strategy=Strategy.OVERLAP, tile_rows=8, depth=2),
+    "pathfinder": dict(strategy=Strategy.DROP_OFF, tile_rows=8, depth=2),
+    "nw": dict(strategy=Strategy.REGISTER_BYPASS, tile_rows=8, depth=2),
+    "lud": dict(strategy=Strategy.OVERLAP, bs=32, depth=2),
+    "matmul": dict(strategy=Strategy.OVERLAP, bm=128, bk=128, bn=128,
+                   depth=2),
+    "flash_attention": dict(strategy=Strategy.OVERLAP, bq=128, bk=128,
+                            depth=2),
+}
+
+_SEED_DEFAULTS = {k: dict(v) for k, v in KERNEL_DEFAULTS.items()}
+
+
+def default_config(kernel: str) -> Dict[str, Any]:
+    """A copy of the current default config for ``kernel``."""
+    return dict(KERNEL_DEFAULTS[kernel])
+
+
+def seed_default_config(kernel: str) -> Dict[str, Any]:
+    """The original hard-coded config, regardless of installed tunings."""
+    return dict(_SEED_DEFAULTS[kernel])
+
+
+def set_default_config(kernel: str, **config: Any) -> Dict[str, Any]:
+    """Overwrite default constants for ``kernel`` (tuner integration point).
+
+    Unknown keys are rejected so a stale registry cannot inject parameters
+    a kernel does not understand."""
+    cur = KERNEL_DEFAULTS[kernel]
+    unknown = set(config) - set(cur)
+    if unknown:
+        raise KeyError(f"unknown config keys for {kernel}: {sorted(unknown)}")
+    cur.update(config)
+    return dict(cur)
+
+
+def reset_default_configs() -> None:
+    """Restore the seed defaults (tests / benchmark baselines)."""
+    for k, v in _SEED_DEFAULTS.items():
+        KERNEL_DEFAULTS[k] = dict(v)
+
+
+def _resolve(kernel: str, **given: Any) -> Dict[str, Any]:
+    cfg = KERNEL_DEFAULTS[kernel]
+    return {k: (cfg[k] if v is None else v) for k, v in given.items()}
+
+
+def _with_seed_fallback(kernel: str, given: Dict[str, Any],
+                        call: Callable[[Dict[str, Any]], Any]):
+    """Run ``call`` with defaults-resolved config; if a *tuned* default is
+    structurally invalid for this problem (tile does not divide the shape,
+    raising ValueError), retry once with the seed constants.
+
+    Tuned installs are per-(large)-shape winners promoted to process-wide
+    defaults; a smaller call shape must degrade to the seed config, not
+    crash.  Explicitly-passed (non-None) parameters are never overridden —
+    a user error still raises."""
+    cfg = _resolve(kernel, **given)
+    seed = {k: (_SEED_DEFAULTS[kernel][k] if v is None else v)
+            for k, v in given.items()}
+    try:
+        return call(cfg)
+    except ValueError:
+        if cfg == seed:
+            raise
+        log.warning("tuned %s config %s invalid for this shape; "
+                    "falling back to seed defaults", kernel,
+                    {k: v for k, v in cfg.items() if given[k] is None})
+        return call(seed)
+
+
+# ---------------------------------------------------------------------------
+# jit'd implementations (explicit static config) + resolving wrappers
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=(
     "iters", "strategy", "tile_rows", "n_tiles", "depth", "interpret"))
-def stream(x, *, iters=1, strategy=Strategy.OVERLAP, tile_rows=8, n_tiles=4,
-           depth=2, interpret=True):
+def _stream(x, *, iters, strategy, tile_rows, n_tiles, depth, interpret):
     return _st.stream_pallas(x, iters=iters, strategy=strategy,
                              tile_rows=tile_rows, n_tiles=n_tiles,
                              depth=depth, interpret=interpret)
 
 
+def stream(x, *, iters=1, strategy=None, tile_rows=None, n_tiles=None,
+           depth=None, interpret=True):
+    return _with_seed_fallback(
+        "stream", dict(strategy=strategy, tile_rows=tile_rows,
+                       n_tiles=n_tiles, depth=depth),
+        lambda cfg: _stream(x, iters=iters, interpret=interpret, **cfg))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "iters", "strategy", "tile_rows", "depth", "grid", "interpret"))
-def hotspot(temp, power, *, iters=1, strategy=Strategy.OVERLAP, tile_rows=8,
-            depth=2, grid=1, interpret=True):
+def _hotspot(temp, power, *, iters, strategy, tile_rows, depth, grid,
+             interpret):
     return _hs.hotspot_pallas(temp, power, iters=iters, strategy=strategy,
                               tile_rows=tile_rows, depth=depth, grid=grid,
                               interpret=interpret)
 
 
+def hotspot(temp, power, *, iters=1, strategy=None, tile_rows=None,
+            depth=None, grid=1, interpret=True):
+    return _with_seed_fallback(
+        "hotspot", dict(strategy=strategy, tile_rows=tile_rows, depth=depth),
+        lambda cfg: _hotspot(temp, power, iters=iters, grid=grid,
+                             interpret=interpret, **cfg))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "strategy", "tile_rows", "depth", "interpret"))
-def pathfinder(wall, *, strategy=Strategy.DROP_OFF, tile_rows=8, depth=2,
-               interpret=True):
+def _pathfinder(wall, *, strategy, tile_rows, depth, interpret):
     return _pf.pathfinder_pallas(wall, strategy=strategy,
                                  tile_rows=tile_rows, depth=depth,
                                  interpret=interpret)
 
 
+def pathfinder(wall, *, strategy=None, tile_rows=None, depth=None,
+               interpret=True):
+    return _with_seed_fallback(
+        "pathfinder", dict(strategy=strategy, tile_rows=tile_rows,
+                           depth=depth),
+        lambda cfg: _pathfinder(wall, interpret=interpret, **cfg))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "penalty", "strategy", "tile_rows", "depth", "interpret"))
-def nw(seq_scores, *, penalty=10, strategy=Strategy.REGISTER_BYPASS,
-       tile_rows=8, depth=2, interpret=True):
+def _nw_jit(seq_scores, *, penalty, strategy, tile_rows, depth, interpret):
     return _nw.nw_pallas(seq_scores, penalty, strategy=strategy,
                          tile_rows=tile_rows, depth=depth,
                          interpret=interpret)
 
 
+def nw(seq_scores, *, penalty=10, strategy=None, tile_rows=None, depth=None,
+       interpret=True):
+    return _with_seed_fallback(
+        "nw", dict(strategy=strategy, tile_rows=tile_rows, depth=depth),
+        lambda cfg: _nw_jit(seq_scores, penalty=penalty,
+                            interpret=interpret, **cfg))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "bs", "strategy", "depth", "interpret"))
-def lud(a, *, bs=32, strategy=Strategy.OVERLAP, depth=2, interpret=True):
+def _lud_jit(a, *, bs, strategy, depth, interpret):
     return _lud.lud_pallas(a, bs=bs, strategy=strategy, depth=depth,
                            interpret=interpret)
 
 
+def lud(a, *, bs=None, strategy=None, depth=None, interpret=True):
+    return _with_seed_fallback(
+        "lud", dict(bs=bs, strategy=strategy, depth=depth),
+        lambda cfg: _lud_jit(a, interpret=interpret, **cfg))
+
+
 @functools.partial(jax.jit, static_argnames=(
     "strategy", "bm", "bk", "bn", "depth", "interpret"))
-def matmul(a, b, *, strategy=Strategy.OVERLAP, bm=128, bk=128, bn=128,
-           depth=2, interpret=True):
+def _matmul(a, b, *, strategy, bm, bk, bn, depth, interpret):
     return _mm.matmul_pallas(a, b, strategy=strategy, bm=bm, bk=bk, bn=bn,
                              depth=depth, interpret=interpret)
+
+
+def matmul(a, b, *, strategy=None, bm=None, bk=None, bn=None, depth=None,
+           interpret=True):
+    return _with_seed_fallback(
+        "matmul", dict(strategy=strategy, bm=bm, bk=bk, bn=bn, depth=depth),
+        lambda cfg: _matmul(a, b, interpret=interpret, **cfg))
 
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "scale", "strategy", "bq", "bk", "depth",
     "interpret"))
-def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
-                    strategy=Strategy.OVERLAP, bq=128, bk=128, depth=2,
-                    interpret=True):
-    """q: (..., H, S, D), k/v: (..., KVH, S, D); leading dims are vmapped."""
+def _flash_jit(q, k, v, *, causal, window, scale, strategy, bq, bk, depth,
+               interpret):
     fn = functools.partial(
         _fa.flash_attention_pallas, causal=causal, window=window,
         scale=scale, strategy=strategy, bq=bq, bk=bk, depth=depth,
         interpret=interpret)
-    if q.ndim == 3:
-        return fn(q, k, v)
     for _ in range(q.ndim - 3):
         fn = jax.vmap(fn)
     return fn(q, k, v)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    strategy=None, bq=None, bk=None, depth=None,
+                    interpret=True):
+    """q: (..., H, S, D), k/v: (..., KVH, S, D); leading dims are vmapped."""
+    return _with_seed_fallback(
+        "flash_attention", dict(strategy=strategy, bq=bq, bk=bk,
+                                depth=depth),
+        lambda cfg: _flash_jit(q, k, v, causal=causal, window=window,
+                               scale=scale, interpret=interpret, **cfg))

@@ -19,7 +19,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.async_pipeline import (Strategy, TileStream, WriteBack, emit,
-                                   scratch_for, ring_scratch, dma_sems)
+                                   scratch_for, ring_scratch, dma_sems,
+                                   compiler_params)
 
 OUT_DEPTH = 2
 
@@ -90,7 +91,7 @@ def stream_pallas(x: jax.Array, *, iters: int = 1,
             dma_sems(OUT_DEPTH),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("arbitrary",)),
     )(x)
 

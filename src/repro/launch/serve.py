@@ -125,8 +125,13 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--tuning-registry", default=None,
+                    help="autotuning registry JSON (default "
+                         "./tuning_registry.json)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
+    from ..tuning import apply_tuned_kernel_defaults
+    apply_tuned_kernel_defaults(args.tuning_registry)
 
     from ..configs import get_smoke_config
     from ..distributed.sharding import split_tree

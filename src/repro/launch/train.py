@@ -184,8 +184,13 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--tuning-registry", default=None,
+                    help="autotuning registry JSON (default "
+                         "./tuning_registry.json)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
+    from ..tuning import apply_tuned_kernel_defaults
+    apply_tuned_kernel_defaults(args.tuning_registry)
 
     from ..configs import get_config, get_smoke_config
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -1,0 +1,32 @@
+"""Autotuning subsystem: empirical async-strategy search with a persistent
+results registry.
+
+The paper's central finding is that asynchronous data movement only pays in
+specific regimes; this package turns the repo's per-kernel constants
+(strategy, ring depth, tile shape) from guesses into *searched, measured,
+cached and reused* decisions:
+
+  SearchSpace / TuningTask   enumerate candidates, prune analytically
+  Autotuner                  time survivors (warmup/repeat/outliers)
+  Registry                   schema-versioned JSON cache with provenance
+  tuned(...)                 best-config lookup for a call site
+  apply_registry_defaults()  install winners as kernel defaults (serve/train)
+
+CLI:  PYTHONPATH=src python -m repro.tuning.cli tune --kernel stream
+"""
+from .registry import (Measurement, Registry, SchemaMismatch, TuningRecord,
+                       SCHEMA_VERSION, default_registry_path, make_key)
+from .search_space import (Candidate, KernelSpec, SearchSpace, TuningTask,
+                           KERNELS, SPECS, default_task, predict_time)
+from .autotuner import (Autotuner, TimingStats, apply_registry_defaults,
+                        apply_tuned_kernel_defaults, decode_config,
+                        time_callable, tune_kernel, tuned)
+
+__all__ = [
+    "Autotuner", "Candidate", "KernelSpec", "KERNELS", "Measurement",
+    "Registry", "SCHEMA_VERSION", "SchemaMismatch", "SearchSpace", "SPECS",
+    "TimingStats", "TuningRecord", "TuningTask", "apply_registry_defaults",
+    "apply_tuned_kernel_defaults", "decode_config", "default_registry_path",
+    "default_task", "make_key", "predict_time", "time_callable",
+    "tune_kernel", "tuned",
+]

@@ -1,0 +1,485 @@
+"""Candidate enumeration + analytic pruning for the autotuner.
+
+Per kernel we enumerate (strategy x ring depth x tile shape) candidates,
+attach an analytic execution-time prediction from the roofline model
+(``core.balance`` / ``core.hardware`` peaks, with the per-strategy overlap
+terms from the paper's Fig. 3 analysis), and drop candidates that are
+*obviously dominated* before any empirical timing:
+
+  * infeasible: tile shapes that do not divide the problem, or whose VMEM
+    footprint exceeds the chip's scratch budget;
+  * dominated: predicted time worse than ``keep_ratio`` x the best
+    prediction (the paper's expectation model is only trusted for coarse
+    ordering — the empirical pass decides among the survivors).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import hardware
+from ..core.async_pipeline import Strategy
+from ..kernels import ops
+from ..kernels.matmul import matmul_vmem_bytes
+from ..kernels.stream import stream_flops_bytes
+
+#: keep candidates predicted within this factor of the analytic best
+DEFAULT_KEEP_RATIO = 2.0
+
+#: per-tile DMA issue overhead used by the strategy model (seconds)
+ISSUE_S = 1e-6
+
+
+def predict_time(strategy: Strategy, flops: float, nbytes: float, *,
+                 depth: int, n_tiles: int,
+                 chip: Optional[hardware.Chip] = None) -> float:
+    """Analytic execution-time model (seconds) for one strategy.
+
+    sync:            t_m * 1.5 + t_c   (staging re-pass through VMEM)
+    register_bypass: t_m + t_c         (no overlap, no staging)
+    overlap:         max(t_m, t_c) + ring fill
+    drop_off:        max(t_m, t_c) + chunk fill + chunked issue overhead
+    """
+    chip = chip or hardware.TARGET
+    t_c = flops / (chip.tflops_f32 * 1e12)
+    t_m = nbytes / (chip.mem_bw_gbs * 1e9)
+    n_tiles = max(n_tiles, 1)
+    issue = ISSUE_S * n_tiles
+    if strategy == Strategy.SYNC:
+        return t_m * 1.5 + t_c + issue
+    if strategy == Strategy.REGISTER_BYPASS:
+        return t_m + t_c + issue
+    if strategy == Strategy.OVERLAP:
+        fill = (t_m / n_tiles) * (max(depth, 2) - 1)
+        return max(t_m, t_c) + fill + issue
+    # DROP_OFF: chunk-granularity fill, more per-chunk issue overhead
+    fill = (t_m / n_tiles) / 4
+    return max(t_m, t_c) + fill + 4 * issue
+
+
+@dataclass
+class Candidate:
+    """One point of a kernel's search space, with its analytic position."""
+    config: Dict[str, Any]
+    predicted_us: float = 0.0
+    vmem_bytes: int = 0
+    feasible: bool = True
+    why_pruned: str = ""
+
+    @property
+    def strategy(self) -> Strategy:
+        return self.config["strategy"]
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel specs: how to build inputs, call the kernel, enumerate tiles,
+# and estimate flops/bytes/VMEM for a candidate.
+# ---------------------------------------------------------------------------
+
+STRATEGIES: Tuple[Strategy, ...] = tuple(Strategy)
+DEPTHS: Tuple[int, ...] = (2, 4)
+
+
+def strategy_depths(strategy: Strategy) -> Tuple[int, ...]:
+    """Ring depths worth searching: SYNC and REGISTER_BYPASS are
+    single-buffered (emit ignores depth), so depth variants would be
+    duplicate candidates measured twice."""
+    if strategy in (Strategy.SYNC, Strategy.REGISTER_BYPASS):
+        return (2,)
+    return DEPTHS
+
+
+def _strategy_depth_pairs():
+    return [(s, d) for s in STRATEGIES for d in strategy_depths(s)]
+
+
+def _dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+@dataclass
+class KernelSpec:
+    name: str
+    default_shape: Tuple[int, ...]
+    make_args: Callable[[Tuple[int, ...], Any], Tuple]
+    call: Callable[..., Any]          # call(args, config, interpret)
+    enumerate_configs: Callable[[Tuple[int, ...]], List[Dict[str, Any]]]
+    flops_bytes: Callable[[Tuple[int, ...], Any, Dict[str, Any]],
+                          Tuple[float, float]]
+    n_tiles: Callable[[Tuple[int, ...], Dict[str, Any]], int]
+    vmem_bytes: Callable[[Tuple[int, ...], Any, Dict[str, Any]], int]
+
+
+def _uniform(shape, dtype, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape,
+                              jnp.dtype(dtype))
+
+
+# -- stream -----------------------------------------------------------------
+
+STREAM_ITERS = 4          # fixed workload intensity for tuning runs
+
+
+def _stream_configs(shape):
+    rows, _ = shape
+    out = []
+    for (s, depth), tr, nt in itertools.product(
+            _strategy_depth_pairs(), (8, 16, 32), (2, 4, 8)):
+        if rows % (tr * nt):
+            continue
+        out.append(dict(strategy=s, depth=depth, tile_rows=tr, n_tiles=nt))
+    return out
+
+
+def _stream_vmem(shape, dtype, cfg):
+    _, width = shape
+    isz = _dtype_bytes(dtype)
+    tile = cfg["tile_rows"] * width * isz
+    d = 1 if cfg["strategy"] in (Strategy.SYNC, Strategy.REGISTER_BYPASS) \
+        else cfg["depth"]
+    stage = tile if cfg["strategy"] == Strategy.SYNC else 0
+    return d * tile + 2 * tile + stage          # in ring + out ring + staging
+
+
+STREAM = KernelSpec(
+    name="stream",
+    default_shape=(512, 256),
+    make_args=lambda shape, dtype: (_uniform(shape, dtype),),
+    call=lambda args, cfg, interp: ops.stream(
+        args[0], iters=STREAM_ITERS, interpret=interp, **cfg),
+    enumerate_configs=_stream_configs,
+    flops_bytes=lambda shape, dtype, cfg: stream_flops_bytes(
+        shape, STREAM_ITERS, _dtype_bytes(dtype)),
+    n_tiles=lambda shape, cfg: cfg["n_tiles"],
+    vmem_bytes=_stream_vmem,
+)
+
+
+# -- matmul -----------------------------------------------------------------
+
+def _matmul_configs(shape):
+    m, k, n = shape
+    out = []
+    for (s, depth), bm, bk, bn in itertools.product(
+            _strategy_depth_pairs(), (128, 256), (128, 256), (128, 256)):
+        if m % bm or k % bk or n % bn:
+            continue
+        out.append(dict(strategy=s, depth=depth, bm=bm, bk=bk, bn=bn))
+    return out
+
+
+def _matmul_flops_bytes(shape, dtype, cfg):
+    m, k, n = shape
+    isz = _dtype_bytes(dtype)
+    flops = 2.0 * m * k * n
+    # A streamed once per N-block, B once per M-block, fp32 C written once
+    nbytes = (m * k * (n // cfg["bn"]) + k * n * (m // cfg["bm"])) * isz \
+        + m * n * 4
+    return flops, nbytes
+
+
+MATMUL = KernelSpec(
+    name="matmul",
+    default_shape=(256, 256, 256),
+    make_args=lambda shape, dtype: (
+        _uniform((shape[0], shape[1]), dtype, 0),
+        _uniform((shape[1], shape[2]), dtype, 1)),
+    call=lambda args, cfg, interp: ops.matmul(
+        args[0], args[1], interpret=interp, **cfg),
+    enumerate_configs=_matmul_configs,
+    flops_bytes=_matmul_flops_bytes,
+    n_tiles=lambda shape, cfg: shape[1] // cfg["bk"],
+    vmem_bytes=lambda shape, dtype, cfg: matmul_vmem_bytes(
+        cfg["strategy"], cfg["bm"], cfg["bk"], cfg["bn"], cfg["depth"],
+        _dtype_bytes(dtype)),
+)
+
+
+# -- hotspot ----------------------------------------------------------------
+
+def _hotspot_configs(shape):
+    rows, _ = shape
+    out = []
+    for (s, depth), tr in itertools.product(_strategy_depth_pairs(),
+                                             (8, 16, 32)):
+        if rows % tr:
+            continue
+        out.append(dict(strategy=s, depth=depth, tile_rows=tr))
+    return out
+
+
+def _hotspot_vmem(shape, dtype, cfg):
+    _, cols = shape
+    isz = _dtype_bytes(dtype)
+    t_tile = (cfg["tile_rows"] + 2) * (cols + 2) * isz
+    p_tile = cfg["tile_rows"] * cols * isz
+    d = 1 if cfg["strategy"] in (Strategy.SYNC, Strategy.REGISTER_BYPASS) \
+        else cfg["depth"]
+    stage = (t_tile + p_tile) if cfg["strategy"] == Strategy.SYNC else 0
+    return d * (t_tile + p_tile) + 2 * p_tile + stage
+
+
+HOTSPOT = KernelSpec(
+    name="hotspot",
+    default_shape=(256, 256),
+    make_args=lambda shape, dtype: (_uniform(shape, dtype, 0),
+                                    _uniform(shape, dtype, 1)),
+    call=lambda args, cfg, interp: ops.hotspot(
+        args[0], args[1], iters=1, interpret=interp, **cfg),
+    enumerate_configs=_hotspot_configs,
+    flops_bytes=lambda shape, dtype, cfg: (
+        10.0 * shape[0] * shape[1],
+        3.0 * shape[0] * shape[1] * _dtype_bytes(dtype)),
+    n_tiles=lambda shape, cfg: max(shape[0] // cfg["tile_rows"], 1),
+    vmem_bytes=_hotspot_vmem,
+)
+
+
+# -- lud --------------------------------------------------------------------
+
+def _lud_configs(shape):
+    n = shape[0]
+    out = []
+    for (s, depth), bs in itertools.product(_strategy_depth_pairs(),
+                                             (16, 32, 64)):
+        if n % bs or bs >= n:
+            continue
+        out.append(dict(strategy=s, depth=depth, bs=bs))
+    return out
+
+
+LUD = KernelSpec(
+    name="lud",
+    default_shape=(64,),     # interpret-mode compile cost grows fast with n
+    make_args=lambda shape, dtype: (
+        (_uniform((shape[0], shape[0]), dtype)
+         + shape[0] * jnp.eye(shape[0], dtype=jnp.dtype(dtype))),),
+    call=lambda args, cfg, interp: ops.lud(args[0], interpret=interp, **cfg),
+    enumerate_configs=_lud_configs,
+    flops_bytes=lambda shape, dtype, cfg: (
+        (2.0 / 3.0) * shape[0] ** 3,
+        2.0 * shape[0] ** 3 / (3.0 * cfg["bs"]) * _dtype_bytes(dtype)),
+    n_tiles=lambda shape, cfg: max(shape[0] // cfg["bs"] - 1, 1),
+    vmem_bytes=lambda shape, dtype, cfg: (
+        (2 + (1 if cfg["strategy"] in (Strategy.SYNC,
+                                       Strategy.REGISTER_BYPASS)
+          else cfg["depth"]) * 2 + 2 + 2)
+        * 128 * cfg["bs"] * _dtype_bytes(dtype)),
+)
+
+
+# -- nw ---------------------------------------------------------------------
+
+def _nw_configs(shape):
+    n = shape[0]
+    out = []
+    for (s, depth), tr in itertools.product(_strategy_depth_pairs(),
+                                             (4, 8, 16)):
+        if n % tr:
+            continue
+        out.append(dict(strategy=s, depth=depth, tile_rows=tr))
+    return out
+
+
+def _nw_width(n):
+    return ((n + 1 + 127) // 128) * 128
+
+
+NW = KernelSpec(
+    name="nw",
+    default_shape=(128,),
+    make_args=lambda shape, dtype: (
+        jax.random.randint(jax.random.PRNGKey(0),
+                           (shape[0], shape[0]), -3, 4).astype(jnp.float32),),
+    call=lambda args, cfg, interp: ops.nw(
+        args[0], penalty=10, interpret=interp, **cfg),
+    enumerate_configs=_nw_configs,
+    flops_bytes=lambda shape, dtype, cfg: (
+        4.0 * shape[0] * _nw_width(shape[0]),
+        2.0 * shape[0] * _nw_width(shape[0]) * 4),
+    n_tiles=lambda shape, cfg: max(shape[0] // cfg["tile_rows"], 1),
+    vmem_bytes=lambda shape, dtype, cfg: (
+        ((1 if cfg["strategy"] in (Strategy.SYNC, Strategy.REGISTER_BYPASS)
+          else cfg["depth"]) + 3 +
+         (1 if cfg["strategy"] == Strategy.SYNC else 0))
+        * cfg["tile_rows"] * _nw_width(shape[0]) * 4),
+)
+
+
+# -- pathfinder -------------------------------------------------------------
+
+def _pathfinder_configs(shape):
+    rows, _ = shape
+    out = []
+    for (s, depth), tr in itertools.product(_strategy_depth_pairs(),
+                                             (4, 8, 16)):
+        if (rows - 1) % tr:
+            continue
+        out.append(dict(strategy=s, depth=depth, tile_rows=tr))
+    return out
+
+
+PATHFINDER = KernelSpec(
+    name="pathfinder",
+    default_shape=(129, 256),
+    make_args=lambda shape, dtype: (
+        jax.random.randint(jax.random.PRNGKey(0), shape, 0, 10, jnp.int32),),
+    call=lambda args, cfg, interp: ops.pathfinder(
+        args[0], interpret=interp, **cfg),
+    enumerate_configs=_pathfinder_configs,
+    flops_bytes=lambda shape, dtype, cfg: (
+        3.0 * shape[0] * shape[1], float(shape[0] * shape[1] * 4)),
+    n_tiles=lambda shape, cfg: max((shape[0] - 1) // cfg["tile_rows"], 1),
+    vmem_bytes=lambda shape, dtype, cfg: (
+        ((1 if cfg["strategy"] in (Strategy.SYNC, Strategy.REGISTER_BYPASS)
+          else cfg["depth"]) + 2 +
+         (1 if cfg["strategy"] == Strategy.SYNC else 0))
+        * cfg["tile_rows"] * shape[1] * 4),
+)
+
+
+# -- flash attention --------------------------------------------------------
+
+def _flash_configs(shape):
+    _, s_len, _ = shape
+    out = []
+    for (s, depth), bq, bk in itertools.product(
+            _strategy_depth_pairs(), (128, 256), (128, 256)):
+        if s_len % bq or s_len % bk:
+            continue
+        out.append(dict(strategy=s, depth=depth, bq=bq, bk=bk))
+    return out
+
+
+def _flash_flops_bytes(shape, dtype, cfg):
+    h, s, d = shape
+    isz = _dtype_bytes(dtype)
+    flops = 2.0 * 2.0 * h * s * s * d * 0.5          # 2 matmuls, causal half
+    nbytes = h * (s // cfg["bq"]) * 2 * s * d * isz * 0.5 \
+        + h * s * d * (isz + 4)
+    return flops, nbytes
+
+
+FLASH = KernelSpec(
+    name="flash_attention",
+    default_shape=(2, 256, 64),
+    make_args=lambda shape, dtype: tuple(
+        jax.random.normal(jax.random.PRNGKey(i), shape, jnp.dtype(dtype))
+        for i in range(3)),
+    call=lambda args, cfg, interp: ops.flash_attention(
+        args[0], args[1], args[2], causal=True, interpret=interp, **cfg),
+    enumerate_configs=_flash_configs,
+    flops_bytes=_flash_flops_bytes,
+    n_tiles=lambda shape, cfg: max(shape[1] // cfg["bk"], 1),
+    vmem_bytes=lambda shape, dtype, cfg: (
+        ((1 if cfg["strategy"] in (Strategy.SYNC, Strategy.REGISTER_BYPASS)
+          else cfg["depth"]) * 2 * cfg["bk"] * shape[2]
+         * _dtype_bytes(dtype))
+        + cfg["bq"] * shape[2] * (_dtype_bytes(dtype) + 4) + cfg["bq"] * 8),
+)
+
+
+SPECS: Dict[str, KernelSpec] = {
+    s.name: s for s in
+    (STREAM, MATMUL, HOTSPOT, LUD, NW, PATHFINDER, FLASH)
+}
+
+KERNELS: Tuple[str, ...] = tuple(SPECS)
+
+
+# ---------------------------------------------------------------------------
+# SearchSpace + TuningTask
+# ---------------------------------------------------------------------------
+
+class SearchSpace:
+    """All candidates for (kernel, shape, dtype) with analytic annotations."""
+
+    def __init__(self, kernel: str, shape: Sequence[int],
+                 dtype: str = "float32",
+                 chip: Optional[hardware.Chip] = None,
+                 vmem_limit: Optional[int] = None):
+        if kernel not in SPECS:
+            raise KeyError(f"unknown kernel {kernel!r}; known: {KERNELS}")
+        self.spec = SPECS[kernel]
+        self.kernel = kernel
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = dtype
+        self.chip = chip or hardware.TARGET
+        if vmem_limit is not None:
+            self.vmem_limit = vmem_limit
+        elif self.chip.vmem_mb:
+            self.vmem_limit = int(self.chip.vmem_mb * 2 ** 20)
+        else:
+            self.vmem_limit = hardware.VMEM_BYTES
+
+    def annotate(self, config: Dict[str, Any]) -> Candidate:
+        flops, nbytes = self.spec.flops_bytes(self.shape, self.dtype, config)
+        t = predict_time(config["strategy"], flops, nbytes,
+                         depth=config["depth"],
+                         n_tiles=self.spec.n_tiles(self.shape, config),
+                         chip=self.chip)
+        vmem = int(self.spec.vmem_bytes(self.shape, self.dtype, config))
+        return Candidate(config=dict(config), predicted_us=t * 1e6,
+                         vmem_bytes=vmem)
+
+    def candidates(self) -> List[Candidate]:
+        return [self.annotate(c)
+                for c in self.spec.enumerate_configs(self.shape)]
+
+    def pruned(self, keep_ratio: float = DEFAULT_KEEP_RATIO
+               ) -> Tuple[List[Candidate], List[Candidate]]:
+        """(survivors, dropped).  Drops VMEM-infeasible candidates and those
+        analytically dominated by more than ``keep_ratio``."""
+        cands = self.candidates()
+        for c in cands:
+            if c.vmem_bytes > self.vmem_limit:
+                c.feasible = False
+                c.why_pruned = (f"vmem {c.vmem_bytes} > "
+                                f"limit {self.vmem_limit}")
+        feasible = [c for c in cands if c.feasible]
+        if feasible:
+            best = min(c.predicted_us for c in feasible)
+            for c in feasible:
+                if c.predicted_us > keep_ratio * best:
+                    c.feasible = False
+                    c.why_pruned = (f"predicted {c.predicted_us:.1f}us > "
+                                    f"{keep_ratio:g}x best {best:.1f}us")
+        survivors = [c for c in cands if c.feasible]
+        dropped = [c for c in cands if not c.feasible]
+        return survivors, dropped
+
+
+@dataclass
+class TuningTask:
+    """One tunable cell: a kernel at a concrete shape/dtype on a chip."""
+    kernel: str
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    chip: str = hardware.TARGET.name
+    interpret: bool = True
+    keep_ratio: float = DEFAULT_KEEP_RATIO
+    space: SearchSpace = field(init=False)
+
+    def __post_init__(self):
+        self.shape = tuple(int(s) for s in self.shape)
+        self.space = SearchSpace(self.kernel, self.shape, self.dtype,
+                                 chip=hardware.get_chip(self.chip))
+
+    def make_args(self) -> Tuple:
+        return self.space.spec.make_args(self.shape, self.dtype)
+
+    def call(self, args: Tuple, config: Dict[str, Any]):
+        return self.space.spec.call(args, config, self.interpret)
+
+
+def default_task(kernel: str, *, shape: Optional[Sequence[int]] = None,
+                 dtype: str = "float32", interpret: bool = True,
+                 chip: Optional[str] = None) -> TuningTask:
+    spec = SPECS[kernel]
+    return TuningTask(kernel=kernel,
+                      shape=tuple(shape or spec.default_shape), dtype=dtype,
+                      chip=chip or hardware.TARGET.name, interpret=interpret)

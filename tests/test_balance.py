@@ -1,0 +1,86 @@
+"""Machine-balance tests promised by core/balance.py: the paper's §6
+expectation model and Fig. 1 balance derivations over the Table 1 lineage."""
+import math
+
+import pytest
+
+from repro.core import balance, hardware
+
+DATACENTER_LINEAGE = ["K80", "P100", "V100", "A100"]
+
+
+def test_v100_to_a100_expected_speedup_is_bw_bound():
+    """Paper §6: V100→A100 = min(FLOP ratio 1.38, BW ratio 1.73) = 1.38x."""
+    v100 = hardware.get_chip("V100")
+    a100 = hardware.get_chip("A100")
+    flop_ratio = a100.tflops_f32 / v100.tflops_f32
+    bw_ratio = a100.mem_bw_gbs / v100.mem_bw_gbs
+    assert flop_ratio == pytest.approx(1.38, abs=0.01)
+    assert bw_ratio == pytest.approx(1.73, abs=0.01)
+    t = balance.expected_speedup(v100, a100)
+    assert t == pytest.approx(1.38, abs=0.01)
+    assert t == min(flop_ratio, bw_ratio)       # the FLOP term binds
+    # f64 behaves the same way on this pair
+    assert balance.expected_speedup(v100, a100, "f64") == pytest.approx(
+        a100.tflops_f64 / v100.tflops_f64, abs=0.01)
+
+
+def test_datacenter_lineage_capability_monotone():
+    """Across Table 1's datacenter lineage both roofline ceilings only go
+    up, so every generational expected speedup is >= 1 (B/F may wobble —
+    the paper's Fig. 1 point — but neither ceiling ever regresses)."""
+    chips = [hardware.get_chip(n) for n in DATACENTER_LINEAGE]
+    for old, new in zip(chips, chips[1:]):
+        assert new.mem_bw_gbs > old.mem_bw_gbs, (old.name, new.name)
+        assert new.tflops_f32 > old.tflops_f32, (old.name, new.name)
+        assert balance.expected_speedup(old, new) >= 1.0
+        assert balance.expected_speedup(new, old) <= 1.0  # and reverses
+
+
+def test_machine_balance_bytes_per_flop_range():
+    """B/F across the full Table 1 lineage: every GPU sits well below
+    1 byte/flop (fp32) and the A100 has the highest datacenter fp32 B/F —
+    the 'bandwidth kept pace' claim behind its async-copy features."""
+    table = balance.lineage_table()
+    for name in DATACENTER_LINEAGE:
+        bf = table[name].bf_f32
+        assert 0.0 < bf < 1.0
+    dc = {n: table[n].bf_f32 for n in DATACENTER_LINEAGE}
+    assert max(dc, key=dc.get) == "A100"
+    # consumer parts are starved relative to their datacenter contemporaries
+    assert table["GTX1050Ti"].bf_f32 < table["P100"].bf_f32
+    assert table["RTX2060S"].bf_f64 > 1.0        # crippled f64: B/F explodes
+
+
+def test_ridge_point_consistent_with_balance():
+    for name in DATACENTER_LINEAGE:
+        chip = hardware.get_chip(name)
+        ridge = balance.ridge_point(chip)
+        bf = balance.machine_balance(chip).bf_f32
+        # ridge (flops/byte) is the reciprocal of balance (bytes/flop)
+        assert ridge * bf == pytest.approx(1.0, rel=1e-9)
+
+
+def test_roofline_time_and_attainable_flops():
+    a100 = hardware.get_chip("A100")
+    peak = a100.tflops_f32 * 1e12
+    bw = a100.mem_bw_gbs * 1e9
+    # compute-bound: high intensity pins the compute term
+    t = balance.roofline_time(flops=peak, bytes_moved=1.0, chip=a100)
+    assert t == pytest.approx(1.0)
+    # memory-bound: low intensity pins the bandwidth term
+    t = balance.roofline_time(flops=1.0, bytes_moved=bw, chip=a100)
+    assert t == pytest.approx(1.0)
+    # attainable flops bends at the ridge
+    ridge = balance.ridge_point(a100)
+    assert balance.attainable_flops(ridge / 10, a100) == pytest.approx(
+        peak / 10)
+    assert balance.attainable_flops(ridge * 10, a100) == pytest.approx(peak)
+
+
+def test_density_increases_kepler_to_ampere():
+    """Fig. 1's other axis: compute density (GFLOPS/mm^2) grows K80→A100."""
+    k80 = balance.machine_balance(hardware.get_chip("K80"))
+    a100 = balance.machine_balance(hardware.get_chip("A100"))
+    assert a100.density_f32 > 3 * k80.density_f32
+    assert not math.isnan(k80.density_f64)

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch import mesh as mesh_mod
 from repro.checkpoint import Checkpointer
 from repro.core.config import ArchConfig, AttnConfig, RunConfig
 from repro.data import synth_batch
@@ -127,8 +128,7 @@ def test_elastic_restore_across_logical_meshes(tmp_path):
     ck = Checkpointer(str(tmp_path))
     ck.save(5, {"params": params})
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = mesh_mod.make_mesh((1,), ("data",))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), {"params": params})
     restored = ck.restore({"params": params}, shardings=sh)
     batch = {k: jnp.asarray(v) for k, v in

@@ -2,8 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.launch import mesh as mesh_mod
 from repro.core import balance, hardware
 from repro.core.config import ArchConfig, AttnConfig
 from repro.data import synth_batch
@@ -125,8 +129,7 @@ def test_nw_tile_invariance(seed, tile_rows):
 def test_zero1_spec_valid(dim0, dim1):
     from repro.optim import zero1_spec
     from repro.distributed.sharding import ShardingRules
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = mesh_mod.make_mesh((1,), ("data",))
     rules = ShardingRules(mesh, {"batch": ("data",), "mlp": None})
     spec = zero1_spec(("mlp", None), (dim0, dim1), rules)
     flat = [a for s in spec for a in

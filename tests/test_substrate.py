@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch import mesh as mesh_mod
 from repro.checkpoint import Checkpointer
 from repro.core import balance, hardware
 from repro.core.config import ArchConfig, AttnConfig, RunConfig
@@ -137,8 +138,7 @@ def test_checkpoint_latest_is_atomic(tmp_path):
 def test_checkpoint_elastic_restore_targets_sharding(tmp_path):
     """Restore places arrays under explicitly-given (new-mesh) shardings."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = mesh_mod.make_mesh((1,), ("data",))
     ck = Checkpointer(str(tmp_path))
     tree = _tree()
     ck.save(1, tree)

@@ -1,0 +1,287 @@
+"""Autotuning subsystem tests: registry round-trip + schema versioning,
+analytic pruning correctness, and an end-to-end tune-then-lookup on the
+stream kernel (Pallas interpret mode)."""
+import json
+import os
+
+import pytest
+
+from repro.core import hardware
+from repro.core.async_pipeline import Strategy
+from repro.kernels import ops
+from repro.tuning import (Autotuner, Measurement, Registry, SchemaMismatch,
+                          SearchSpace, TuningRecord, SCHEMA_VERSION,
+                          default_task, make_key, predict_time, tuned)
+from repro.tuning.autotuner import decode_config
+
+
+def _record(kernel="stream", shape=(64, 128)):
+    return TuningRecord(
+        kernel=kernel, shape=list(shape), dtype="float32", chip="TPUv5e",
+        best={"strategy": "overlap", "tile_rows": 8, "n_tiles": 4,
+              "depth": 2},
+        best_us=12.5, default_us=20.0, speedup_vs_default=1.6,
+        measurements=[Measurement(
+            config={"strategy": "overlap", "tile_rows": 8, "n_tiles": 4,
+                    "depth": 2},
+            us_median=12.5, us_mean=13.0, us_min=12.0, us_std=0.5,
+            n_trials=5, predicted_us=10.0)],
+        n_candidates=1, n_pruned=0)
+
+
+# --- registry ---------------------------------------------------------------
+
+def test_registry_round_trip(tmp_path):
+    path = str(tmp_path / "reg.json")
+    reg = Registry(path)
+    rec = _record()
+    reg.put(rec)
+    # fresh object re-reads from disk
+    reg2 = Registry(path)
+    got = reg2.get("stream", (64, 128), "float32", "TPUv5e")
+    assert got is not None
+    assert got.key == rec.key == make_key("stream", (64, 128), "float32",
+                                          "TPUv5e")
+    assert got.best == rec.best
+    assert got.best_us == rec.best_us
+    assert len(got.measurements) == 1
+    assert got.measurements[0].us_median == 12.5
+    assert got.measurements[0].error is None
+    # miss on any key component
+    assert reg2.get("stream", (64, 129), "float32", "TPUv5e") is None
+    assert reg2.get("stream", (64, 128), "bfloat16", "TPUv5e") is None
+
+
+def test_registry_schema_mismatch_ignored_and_strict(tmp_path):
+    path = str(tmp_path / "reg.json")
+    with open(path, "w") as f:
+        json.dump({"schema_version": SCHEMA_VERSION + 999,
+                   "records": {"stream|64x128|float32|TPUv5e": {"junk": 1}}},
+                  f)
+    # default: stale cache is ignored, not misread
+    reg = Registry(path)
+    assert len(reg) == 0
+    assert reg.get("stream", (64, 128), "float32", "TPUv5e") is None
+    # strict: surfaced
+    with pytest.raises(SchemaMismatch):
+        Registry(path, strict=True).load()
+    # saving rewrites the current schema
+    reg.put(_record())
+    assert json.load(open(path))["schema_version"] == SCHEMA_VERSION
+
+
+def test_registry_concurrent_saves_merge(tmp_path):
+    """Two tuner processes writing different cells must not lose updates:
+    save() re-merges the file so the last writer keeps the other's keys."""
+    path = str(tmp_path / "reg.json")
+    a, b = Registry(path), Registry(path)
+    a.load(), b.load()                  # both snapshot the (empty) file
+    a.put(_record(kernel="stream"))
+    b.put(_record(kernel="matmul"))     # stale view, saved second
+    fresh = Registry(path)
+    assert {r.kernel for r in fresh.records()} == {"stream", "matmul"}
+
+
+def test_registry_save_does_not_revert_unwritten_keys(tmp_path):
+    """Only keys THIS process wrote overlay the disk view: a merely-read
+    record must not be rolled back over another writer's newer version."""
+    path = str(tmp_path / "reg.json")
+    Registry(path).put(_record(kernel="stream"))        # v1 on disk
+    a = Registry(path)
+    a.load()                            # A snapshots stream@v1
+    b = Registry(path)
+    newer = _record(kernel="stream")
+    newer.best_us = 1.0                 # B force-re-tunes stream -> v2
+    b.put(newer)
+    a.put(_record(kernel="matmul"))     # A writes a different cell
+    fresh = Registry(path)
+    stream = fresh.get("stream", (64, 128), "float32", "TPUv5e")
+    assert stream.best_us == 1.0        # B's v2 survived A's stale save
+    assert fresh.get("matmul", (64, 128), "float32", "TPUv5e") is not None
+
+
+def test_interpret_mode_is_part_of_registry_key(tmp_path):
+    """Interpret and compiled tunes of the same cell coexist (v2 keys)."""
+    reg = Registry(str(tmp_path / "reg.json"))
+    cpu = _record()
+    tpu = _record()
+    tpu.interpret = False
+    tpu.best_us = 1.0
+    reg.put(cpu)
+    reg.put(tpu)
+    assert len(reg) == 2
+    assert reg.get("stream", (64, 128), "float32", "TPUv5e",
+                   interpret=True).best_us == 12.5
+    assert reg.get("stream", (64, 128), "float32", "TPUv5e",
+                   interpret=False).best_us == 1.0
+
+
+def test_registry_corrupt_file_treated_as_empty(tmp_path):
+    path = str(tmp_path / "reg.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert len(Registry(path)) == 0
+
+
+# --- search space / pruning -------------------------------------------------
+
+def test_search_space_candidates_feasible():
+    space = SearchSpace("stream", (512, 256))
+    cands = space.candidates()
+    assert len(cands) > 10
+    for c in cands:
+        # every enumerated candidate divides the problem
+        assert 512 % (c.config["tile_rows"] * c.config["n_tiles"]) == 0
+        assert c.predicted_us > 0
+        assert c.vmem_bytes > 0
+
+
+def test_pruning_drops_vmem_infeasible():
+    # a tiny VMEM budget makes every multi-buffered candidate infeasible
+    space = SearchSpace("stream", (512, 256), vmem_limit=1)
+    survivors, dropped = space.pruned()
+    assert not survivors
+    assert all("vmem" in c.why_pruned for c in dropped)
+
+
+def test_pruning_drops_analytically_dominated():
+    space = SearchSpace("stream", (512, 256))
+    survivors, dropped = space.pruned(keep_ratio=1.5)
+    assert survivors and dropped
+    best = min(c.predicted_us for c in survivors)
+    # survivors all within the ratio; every non-vmem drop is outside it
+    for c in survivors:
+        assert c.predicted_us <= 1.5 * best * (1 + 1e-9)
+    for c in dropped:
+        if "vmem" not in c.why_pruned:
+            assert c.predicted_us > 1.5 * best
+    # SYNC is strictly dominated by REGISTER_BYPASS in the model
+    # (staging re-pass: 1.5*t_m vs t_m), so a tight ratio always drops it
+    tight, _ = space.pruned(keep_ratio=1.01)
+    assert tight
+    assert all(c.config["strategy"] != Strategy.SYNC for c in tight)
+
+
+def test_predict_time_strategy_ordering():
+    """Mixed regime (t_c ~ t_m/2): overlap hides the compute under the DMA
+    and wins; sync pays the staging re-pass and loses — paper Fig 3a."""
+    nbytes = 1e9
+    flops = 0.5 * (nbytes / 819e9) * 197e12     # t_c = t_m / 2
+    t = {s: predict_time(s, flops, nbytes, depth=2, n_tiles=64)
+         for s in Strategy}
+    assert t[Strategy.OVERLAP] < t[Strategy.REGISTER_BYPASS]
+    assert t[Strategy.REGISTER_BYPASS] < t[Strategy.SYNC]
+    # and at near-zero compute the ring fill makes overlap lose to bypass
+    t0 = {s: predict_time(s, 1.0, nbytes, depth=2, n_tiles=64)
+          for s in Strategy}
+    assert t0[Strategy.REGISTER_BYPASS] < t0[Strategy.OVERLAP]
+
+
+# --- end-to-end: tune, cache-hit, lookup ------------------------------------
+
+@pytest.fixture
+def fresh_defaults():
+    yield
+    ops.reset_default_configs()
+
+
+def test_tune_then_lookup_stream(tmp_path, fresh_defaults):
+    reg = Registry(str(tmp_path / "reg.json"))
+    tuner = Autotuner(reg, warmup=1, repeats=2)
+    task = default_task("stream", shape=(64, 128))
+    rec = tuner.tune(task)
+    assert rec.best_us > 0
+    assert rec.n_candidates > 0
+    # the hard-coded default was measured, so the speedup is well-defined
+    assert rec.default_us > 0
+    assert rec.speedup_vs_default >= 1.0
+    # winner is the measured minimum
+    ok = [m for m in rec.measurements if m.error is None]
+    assert rec.best_us == min(m.us_median for m in ok)
+
+    # second tune of the same cell is a cache hit: no re-measurement
+    measured = len(rec.measurements)
+    rec2 = tuner.tune(task)
+    assert rec2.best == rec.best and len(rec2.measurements) == measured
+    mtime = os.path.getmtime(reg.path)
+    tuner.tune(task)
+    assert os.path.getmtime(reg.path) == mtime       # not rewritten
+
+    # tuned() lookup returns the decoded winner, ready to splat into ops
+    cfg = tuned("stream", (64, 128), registry=reg)
+    assert isinstance(cfg["strategy"], Strategy)
+    assert cfg == decode_config(rec.best)
+    out = ops.stream(jax_uniform((64, 128)), iters=2, **cfg)
+    assert out.shape == (64, 128)
+
+    # lookup miss falls back to the kernel's default config
+    miss = tuned("stream", (128, 128), registry=reg)
+    assert miss == ops.default_config("stream")
+    assert tuned("stream", (128, 128), registry=reg,
+                 fallback_to_default=False) is None
+
+
+def test_cache_miss_on_interpret_mode_mismatch(tmp_path):
+    """A compiled-mode record must not satisfy an interpreter-mode tune
+    (or vice versa): the timings are not comparable across modes."""
+    reg = Registry(str(tmp_path / "reg.json"))
+    stale = _record(shape=(64, 128))
+    stale.interpret = False              # pretend it was tuned compiled
+    stale.best_us = 0.001                # obviously not a CPU timing
+    reg.put(stale)
+    tuner = Autotuner(reg, warmup=1, repeats=1)
+    rec = tuner.tune(default_task("stream", shape=(64, 128)))
+    assert rec.interpret is True         # re-measured in this process's mode
+    assert rec.best_us > 0.001
+    # and the interpret-mode record now satisfies interpret-mode tunes
+    again = tuner.tune(default_task("stream", shape=(64, 128)))
+    assert again.created_at == rec.created_at      # cache hit, no re-measure
+
+
+def test_apply_registry_defaults_installs_winner(tmp_path, fresh_defaults):
+    from repro.tuning import apply_registry_defaults
+    reg = Registry(str(tmp_path / "reg.json"))
+    rec = _record(shape=(64, 128))
+    rec.best = {"strategy": "drop_off", "tile_rows": 16, "n_tiles": 2,
+                "depth": 4}
+    rec.chip = hardware.TARGET.name
+    reg.put(rec)
+    applied = apply_registry_defaults(reg)
+    assert "stream" in applied
+    cfg = ops.default_config("stream")
+    assert cfg["strategy"] == Strategy.DROP_OFF
+    assert cfg["tile_rows"] == 16 and cfg["depth"] == 4
+    # unknown keys from a stale registry are rejected, not injected
+    with pytest.raises(KeyError):
+        ops.set_default_config("stream", bogus=1)
+
+
+def test_tuned_default_invalid_for_shape_falls_back_to_seed(fresh_defaults):
+    """A winner tuned at a large shape must not crash smaller calls: the
+    wrapper degrades to the seed constants when the installed tile does not
+    divide the problem."""
+    ops.set_default_config("stream", tile_rows=32, n_tiles=8)   # block=256
+    x = jax_uniform((64, 128))                                  # rows=64
+    out = ops.stream(x, iters=1)        # would raise without the fallback
+    assert out.shape == (64, 128)
+    # explicit bad arguments still raise (user error is not masked)
+    with pytest.raises(ValueError):
+        ops.stream(x, iters=1, tile_rows=32, n_tiles=8)
+
+
+def test_tuned_lud_block_size_falls_back_to_seed(fresh_defaults):
+    """lud validates bs with ValueError too, so the same degradation holds
+    for a tuned block size that does not divide a smaller matrix."""
+    import jax.numpy as jnp
+    ops.set_default_config("lud", bs=64)
+    a = jax_uniform((96, 96)) + 96 * jnp.eye(96)     # 96 % 64 != 0
+    out = ops.lud(a)                    # degrades to seed bs=32
+    assert out.shape == (96, 96)
+    with pytest.raises(ValueError):
+        ops.lud(a, bs=64)               # explicit user error still raises
+
+
+def jax_uniform(shape):
+    import jax
+    import jax.numpy as jnp
+    return jax.random.uniform(jax.random.PRNGKey(0), shape, jnp.float32)
