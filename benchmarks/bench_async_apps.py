@@ -1,78 +1,26 @@
 """Paper Fig. 4: async-copy strategies applied to the four Rodinia kernels
 (Hotspot, Pathfinder, NW, LUD).
 
-Correctness + host-side us/call for every (kernel x strategy) via the actual
-Pallas kernels (interpret mode), plus the TPU-target analytic speedups per
-the same overlap model as Fig 3 — reproducing the paper's findings that the
-winning pattern is benchmark-dependent (Hotspot->Overlap, NW->Register
-Bypass, Pathfinder->Drop-Off, LUD->size-dependent crossover).
+The measured (kernel x strategy) grid is the ``fig4/*`` scenario set in
+``repro.bench.scenario``, executed by ``repro.bench.runner`` (canonical
+timing + ``kernels/ref.py`` oracle check per row); the per-kernel
+tolerances live next to the scenarios in ``CHECK_TOL``.  The analytic
+section reproduces the paper's finding that the winning pattern is
+benchmark-dependent (Hotspot->Overlap, NW->Register Bypass,
+Pathfinder->Drop-Off, LUD->size-dependent crossover).
 """
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import hardware
+from repro.bench import runner, scenario
 from repro.core.async_pipeline import Strategy
-from repro.kernels import ops
-
-
-def _bench(fn, reps=1):
-    out = fn()
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn())
-    return out, (time.perf_counter() - t0) / reps * 1e6
 
 
 def run(report):
-    key = jax.random.PRNGKey(0)
-    report.section("Fig4: Rodinia kernels x async strategies "
-                   "(Pallas interpret: correctness + host us/call)")
-
-    # hotspot (paper winner: Overlap 1.12-1.23x)
-    k1, k2 = jax.random.split(key)
-    temp = jax.random.uniform(k1, (32, 126), jnp.float32) * 100 + 300
-    power = jax.random.uniform(k2, (32, 126), jnp.float32)
-    from repro.kernels import ref
-    want = ref.hotspot_ref(temp, power, iters=2)
-    for s in Strategy:
-        got, us = _bench(lambda: ops.hotspot(temp, power, iters=2,
-                                             strategy=s, grid=1))
-        err = float(jnp.abs(got - want).max())
-        report.row("hotspot", s.value, us_per_call=round(us, 1),
-                   max_err=err)
-        assert err < 1e-2
-
-    # pathfinder (paper winner: Drop-Off 1.04-1.11x)
-    wall = jax.random.randint(key, (33, 128), 0, 10, jnp.int32)
-    want = ref.pathfinder_ref(wall)
-    for s in Strategy:
-        got, us = _bench(lambda: ops.pathfinder(wall, strategy=s))
-        ok = bool((np.asarray(got)[0] == np.asarray(want)).all())
-        report.row("pathfinder", s.value, us_per_call=round(us, 1),
-                   exact=ok)
-        assert ok
-
-    # nw (paper winner: Register Bypass 1.01-1.08x)
-    scores = jax.random.randint(key, (32, 32), -3, 4).astype(jnp.float32)
-    want = ref.nw_ref(scores, 10)
-    for s in Strategy:
-        got, us = _bench(lambda: ops.nw(scores, penalty=10, strategy=s))
-        err = float(jnp.abs(got - want).max())
-        report.row("nw", s.value, us_per_call=round(us, 1), max_err=err)
-        assert err < 1e-3
-
-    # lud (paper: size-dependent crossover RB <-> Overlap, 1.25-1.32x)
-    a = jax.random.normal(key, (64, 64), jnp.float32) + 64 * jnp.eye(64)
-    want = ref.lud_ref(a)
-    for s in Strategy:
-        got, us = _bench(lambda: ops.lud(a, bs=32, strategy=s))
-        err = float(jnp.abs(got - want).max())
-        report.row("lud", s.value, us_per_call=round(us, 1), max_err=err)
-        assert err < 1e-2
+    report.section("Fig4: Rodinia kernels x async strategies — fig4/* "
+                   "scenarios (Pallas interpret: correctness + host us/call)")
+    opts = runner.RunOptions(warmup=1, repeats=3, emit=report.add_result)
+    bench = runner.run_scenarios(scenario.scenarios(tag="fig4"), opts)
+    failed = [r.scenario for r in bench.results
+              if not r.metrics["check_ok"]]
+    assert not failed, f"oracle check failed: {failed}"
 
     report.section("Fig4-model: TPU-target speedup over sync per kernel "
                    "(roofline overlap model at paper input sizes)")

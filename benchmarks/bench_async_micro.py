@@ -1,19 +1,16 @@
 """Paper Fig. 3: the asynchronous-copy microbenchmark.
 
-Runs the actual Pallas stream kernel (interpret mode) across arithmetic
-intensities and strategies, reporting per-call wall time on this host (a
-functional-correctness sweep) AND the roofline-positioned analytic model for
-the TPU target, which is where the paper's Fig 3a conclusions (async helps
-when memory-bound, hurts when compute-bound) are reproduced quantitatively.
+The measured half is declared, not hand-rolled: the ``fig3/*`` scenarios in
+``repro.bench.scenario`` (stream kernel x strategy x intensity) run through
+``repro.bench.runner`` — canonical timing, oracle check, full provenance —
+and land in the report as native schema-v2 rows.  The analytic half
+reproduces the paper's Fig 3a conclusions (async helps when memory-bound,
+hurts when compute-bound) via the roofline-positioned strategy model for
+the TPU target.
 """
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import balance, hardware
+from repro.bench import runner, scenario
+from repro.core import hardware
 from repro.core.async_pipeline import Strategy
-from repro.kernels import ops
 from repro.kernels.stream import stream_flops_bytes
 
 # TPU-target model: async copy overlaps DMA with compute; sync does not.
@@ -59,20 +56,8 @@ def run(report):
         report.row("fig3d", f"depth={depth},tiles={tiles}",
                    rel_time=round(t / base, 3))
 
-    report.section("Fig3 functional sweep: Pallas kernel (interpret) "
-                   "correctness + host us/call")
-    x = jax.random.uniform(jax.random.PRNGKey(0), (256, 256), jnp.float32)
-    for strategy in Strategy:
-        for iters in (1, 32):
-            fn = lambda: ops.stream(x, iters=iters, strategy=strategy,
-                                    tile_rows=16, n_tiles=8)
-            out = fn()
-            jax.block_until_ready(out)
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            us = (time.perf_counter() - t0) * 1e6
-            report.row("fig3_functional",
-                       f"{strategy.value}/iters={iters}",
-                       us_per_call=round(us, 1),
-                       max_err=float(jnp.max(jnp.abs(
-                           out - (0.5 ** iters * x + (1 - 0.5 ** iters))))))
+    report.section("Fig3 functional sweep: fig3/* scenarios (Pallas "
+                   "interpret) — correctness + host us/call")
+    opts = runner.RunOptions(warmup=1, repeats=3, emit=report.add_result)
+    bench = runner.run_scenarios(scenario.scenarios(tag="fig3"), opts)
+    assert all(r.metrics["check_ok"] for r in bench.results)

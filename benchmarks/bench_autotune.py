@@ -8,21 +8,21 @@ expectation model pick the right winner, and by how much is it off?
 
 Runs the real Pallas kernels through the tuner (interpret mode on this CPU
 host; pass --compiled on the tuning CLI for real-TPU numbers).  Uses a
-fresh temp registry so the bench always re-measures.
+fresh temp registry so the bench always re-measures.  The tuner times
+candidates through ``repro.bench.timing`` — the same protocol as every
+scenario row — and tunes the exact cells the ``smoke/*`` scenarios
+measure, so a subsequent ``repro.bench.cli sweep`` resolves these winners
+(``config_source: "tuned"``) when pointed at a persistent registry.
 """
 import os
 import tempfile
 
+from repro.bench.scenario import get_scenario
 from repro.tuning import Autotuner, Registry, default_task
 from repro.tuning.autotuner import decode_config
 
 KERNELS = ("stream", "matmul", "hotspot", "pathfinder")
-SHAPES = {
-    "stream": (256, 256),
-    "matmul": (256, 256, 256),
-    "hotspot": (128, 128),
-    "pathfinder": (65, 256),
-}
+SHAPES = {k: get_scenario(f"smoke/{k}").shape for k in KERNELS}
 
 
 def run(report):

@@ -1,5 +1,9 @@
 """Paper Fig. 1: machine balance (B/F) and compute density across the GPU
-lineage, extended with the TPU generations; §6 expected-speedup table."""
+lineage, extended with the TPU generations; §6 expected-speedup table.
+
+Purely analytic (vendor peaks from ``core.hardware``) — nothing to time, so
+this module stays a plain row emitter; measured rows belong to the
+``repro.bench`` scenario runner."""
 from repro.core import balance, hardware
 
 

@@ -7,7 +7,11 @@ by its arithmetic intensity (flops/byte), and per-chip execution time is the
 generation-to-generation speedups and extend the lineage with TPUs.
 
 The kernel suite is OUR Pallas implementations' analytic (flops, bytes) at
-the paper's input sizes (Table 2).
+the paper's input sizes (Table 2).  The per-scenario version of this sweep
+— actual Pallas shapes, resolved (possibly tuned) configs, one model row
+per registered Chip — is ``python -m repro.bench.cli sweep``; this module
+keeps the paper-sized Table 2 suite, which is too big to *measure* in
+interpret mode.
 """
 import math
 

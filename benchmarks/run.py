@@ -1,42 +1,83 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Benchmark harness — compatibility shim over ``repro.bench``.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3] [--json out.json]
+    PYTHONPATH=src python -m benchmarks.run --list
 
-Output: ``section`` headers + ``name,us_per_call,derived...`` CSV rows to
-stdout; ``--json`` additionally writes every Report row machine-readable
-(the feed format for the tuning registry and BENCH_*.json trajectories).
+The measurement machinery lives in ``repro.bench`` (one timing protocol,
+declarative scenarios, schema-versioned results); this module keeps the
+historical entry point and flags working.  Output: ``section`` headers +
+``name,us_per_call,derived...`` CSV rows; ``--json`` additionally writes
+every row machine-readable in the schema-v2 ``BENCH_*.json`` trajectory
+format.  With ``--json -`` the JSON goes to stdout and ALL progress/CSV
+moves to stderr, so the stream parses cleanly.
+
+Prefer ``python -m repro.bench.cli {list,run,sweep}`` for scenario-level
+control (``--kernel``, ``--strategy``, ``--chip``, ``--smoke``).
 """
 import argparse
-import json
 import sys
 import time
 
-REPORT_SCHEMA_VERSION = 1
+from repro.bench import results as bench_results
+
+#: kept for backward compatibility; the payload is now the repro.bench
+#: result schema.
+REPORT_SCHEMA_VERSION = bench_results.SCHEMA_VERSION
 
 
 class Report:
-    def __init__(self):
-        self.rows = []
+    """Streaming CSV reporter, now backed by the repro.bench result schema.
+
+    Legacy callers use ``row()`` (free-form metrics); scenario-based
+    benchmarks hand native ``BenchResult`` rows to ``add_result``.  Both
+    end up in one schema-v2 payload.
+    """
+
+    def __init__(self, stream=None):
+        self.stream = stream if stream is not None else sys.stdout
+        self.rows = []                  # legacy (table, name, kv, section)
+        self.results = []               # native BenchResult rows
         self._section = ""
 
     def section(self, title):
         self._section = title
-        print(f"\n## {title}", flush=True)
+        print(f"\n## {title}", file=self.stream, flush=True)
 
     def note(self, text):
-        print(f"# NOTE: {text}", flush=True)
+        print(f"# NOTE: {text}", file=self.stream, flush=True)
 
     def row(self, table, name, **kv):
         parts = [f"{k}={v}" for k, v in kv.items()]
-        print(f"{table},{name}," + ",".join(parts), flush=True)
+        print(f"{table},{name}," + ",".join(parts), file=self.stream,
+              flush=True)
         self.rows.append((table, name, kv, self._section))
 
+    def add_result(self, result):
+        """Record a native BenchResult and echo its CSV line."""
+        self.results.append(result)
+        m = result.metrics
+        kv = {k: m[k] for k in ("us_median", "us_mean", "us_min", "max_err",
+                                "predicted_us") if k in m}
+        parts = [f"strategy={result.strategy}",
+                 f"config_source={result.config_source}"]
+        parts += [f"{k}={round(v, 4) if isinstance(v, float) else v}"
+                  for k, v in kv.items()]
+        print(f"{result.section or 'bench'},{result.scenario},"
+              + ",".join(parts), file=self.stream, flush=True)
+
     def to_json(self) -> dict:
-        return {
-            "schema_version": REPORT_SCHEMA_VERSION,
-            "rows": [{"table": t, "name": n, "section": s, "metrics": kv}
-                     for t, n, kv, s in self.rows],
-        }
+        report = bench_results.BenchReport()
+        for t, n, kv, s in self.rows:
+            report.add(bench_results.upgrade_v1_row(
+                {"table": t, "name": n, "section": s, "metrics": kv}))
+        report.extend(self.results)
+        try:
+            import jax
+            report.jax_version = jax.__version__
+            report.backend = jax.default_backend()
+        except Exception:
+            pass
+        return report.to_dict()
 
 
 def main(argv=None):
@@ -44,8 +85,11 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="substring filter over benchmark module names")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write all Report rows as JSON to PATH "
-                         "('-' for stdout)")
+                    help="also write all Report rows as schema-v2 JSON to "
+                         "PATH ('-' for stdout; progress moves to stderr)")
+    ap.add_argument("--list", action="store_true",
+                    help="print benchmark modules + registered scenarios "
+                         "and exit without running anything")
     args = ap.parse_args(argv)
 
     from . import (bench_async_apps, bench_async_micro, bench_autotune,
@@ -58,25 +102,39 @@ def main(argv=None):
         ("roofline_table(SSRoofline)", roofline_table.run),
         ("bench_autotune(Tuning)", bench_autotune.run),
     ]
-    report = Report()
+
+    if args.list:
+        from repro.bench import cli as bench_cli
+        print("benchmark modules (--only filters these):")
+        for name, _ in benches:
+            print(f"  {name}")
+        print("\nregistered repro.bench scenarios:")
+        return bench_cli.main(["list"])
+
+    # with --json - the payload owns stdout; everything else goes to stderr
+    stream = sys.stderr if args.json == "-" else sys.stdout
+    report = Report(stream=stream)
     t00 = time.time()
     for name, fn in benches:
         if args.only and args.only not in name:
             continue
-        print(f"\n==== {name} ====", flush=True)
+        print(f"\n==== {name} ====", file=stream, flush=True)
         t0 = time.time()
         fn(report)
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
-    print(f"\n# all benchmarks done in {time.time()-t00:.1f}s")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=stream,
+              flush=True)
+    print(f"\n# all benchmarks done in {time.time()-t00:.1f}s", file=stream)
     if args.json:
+        import json
         payload = report.to_json()
+        n_rows = len(payload["rows"])
         if args.json == "-":
             json.dump(payload, sys.stdout, indent=1)
             sys.stdout.write("\n")
         else:
             with open(args.json, "w") as f:
                 json.dump(payload, f, indent=1)
-            print(f"# wrote {len(payload['rows'])} rows to {args.json}")
+            print(f"# wrote {n_rows} rows to {args.json}", file=stream)
 
 
 if __name__ == "__main__":

@@ -67,7 +67,8 @@ def main():
 
     # --- Autotuning ---------------------------------------------------------
     # The async-copy strategy / ring depth / tile shape of every Pallas
-    # kernel are searched empirically and cached in a persistent registry
+    # kernel are searched empirically (timed with the repo's one canonical
+    # protocol, repro.bench.timing) and cached in a persistent registry
     # (schema-versioned JSON).  First call measures; every later run — and
     # serve.py / train.py at startup — reuses the cached winner.
     import tempfile
@@ -88,6 +89,28 @@ def main():
     print(f"autotune: tuned stream call ok, out={y.shape}; registry at "
           f"{registry.path}")
     # CLI equivalent:  python -m repro.tuning.cli tune --kernel stream
+
+    # --- Benchmarking (repro.bench) -----------------------------------------
+    # Benchmarks are declarative: a Scenario names one (kernel x shape x
+    # dtype x strategy) cell, the runner resolves the config (tuning
+    # registry winner when one exists — config_source says which), checks
+    # the kernel against its kernels/ref.py oracle, times it, and emits a
+    # schema-v2 result row with full provenance.  `sweep` additionally
+    # projects every scenario across the whole Chip lineage (the paper's
+    # generation study).  See src/repro/bench/README.md to add a workload.
+    from repro.bench import runner, scenarios
+
+    sc = scenarios(only="smoke/stream")[0]
+    res = runner.run_scenario(sc, runner.RunOptions(
+        repeats=2, registry=registry))
+    print(f"bench: {res.scenario} strategy={res.strategy} "
+          f"config_source={res.config_source} "
+          f"us_median={res.metrics['us_median']:.0f} "
+          f"max_err={res.metrics['max_err']:.1e}")
+    # CLI equivalents:
+    #   python -m repro.bench.cli list                    # all scenarios
+    #   python -m repro.bench.cli run --only fig3         # one figure
+    #   python -m repro.bench.cli sweep --smoke --json BENCH_sweep.json
 
 
 if __name__ == "__main__":

@@ -1,11 +1,28 @@
-"""Render the §Dry-run / §Roofline markdown tables from the dry-run JSONs."""
-import glob, json, os, sys
+"""Render the markdown tables for EXPERIMENTS.md: the §Dry-run / §Roofline
+tables from the dry-run JSONs, and the benchmark tables from ``BENCH_*.json``
+trajectory files (the ``repro.bench`` schema-v2 result format; legacy v1
+payloads are upgraded on load).
+
+    PYTHONPATH=src python experiments/make_report.py [--bench 'BENCH_*.json']
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 DIR = os.path.join(os.path.dirname(__file__), "dryrun")
 
+#: the lineage subset shown in the per-scenario projection table (the full
+#: sweep covers every registered chip; the report keeps the paper's arc)
+REPORT_CHIPS = ("K80", "P100", "V100", "A100", "TPUv5e")
+
 def fmt_ms(s): return f"{s*1e3:,.1f}"
 
-def main():
+
+def dryrun_tables():
     recs = [json.load(open(f)) for f in sorted(glob.glob(f"{DIR}/*.json"))]
     order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
     recs.sort(key=lambda r: (r["mesh"], r["arch"], order.get(r["shape"], 9)))
@@ -29,6 +46,72 @@ def main():
                   f"| {fmt_ms(r['t_collective'])} | {r['bottleneck']} "
                   f"| {r['useful_flops_ratio']*100:.1f}% "
                   f"| {r['roofline_fraction']*100:.2f}% |")
+
+
+def bench_tables(pattern):
+    from repro.bench.results import BenchReport, ResultSchemaMismatch
+    paths = sorted(glob.glob(pattern))
+    if not paths:
+        print(f"\n*(no benchmark trajectories match {pattern!r} — run "
+              f"`python -m repro.bench.cli sweep --smoke --json "
+              f"BENCH_sweep.json`)*")
+        return
+    for path in paths:
+        try:
+            report = BenchReport.load(path)
+        except (ResultSchemaMismatch, json.JSONDecodeError, OSError) as e:
+            print(f"\n*(skipping {path}: {e})*")
+            continue
+        print(f"\n### Benchmarks: {os.path.basename(path)} "
+              f"(jax {report.jax_version or '?'}, "
+              f"backend {report.backend or '?'}, {report.created_at})\n")
+        measured = [r for r in report.results if r.kind == "measured"]
+        if measured:
+            print("| scenario | chip | strategy | config | us (median) "
+                  "| us (min) | max err | ok |")
+            print("|---|---|---|---|---|---|---|---|")
+            for r in measured:
+                m = r.metrics
+                ok = {True: "Y", False: "**N**"}.get(m.get("check_ok"), "—")
+                err = (f"{m['max_err']:.1e}" if "max_err" in m else "—")
+                print(f"| {r.scenario} | {r.chip} | {r.strategy} "
+                      f"| {r.config_source} | {m.get('us_median', 0):,.1f} "
+                      f"| {m.get('us_min', 0):,.1f} | {err} | {ok} |")
+        model = [r for r in report.results
+                 if r.kind == "model" and r.chip in REPORT_CHIPS]
+        if model:
+            print("\n**Roofline projection across the lineage** "
+                  "(predicted us; full chip set in the JSON)\n")
+            chips = [c for c in REPORT_CHIPS
+                     if any(r.chip == c for r in model)]
+            print("| scenario | " + " | ".join(chips) + " |")
+            print("|---" * (len(chips) + 1) + "|")
+            by_cell = {(r.scenario, r.chip): r for r in model}
+            for name in sorted({r.scenario for r in model}):
+                cells = []
+                for c in chips:
+                    r = by_cell.get((name, c))
+                    cells.append(f"{r.metrics['predicted_us']:,.2f}"
+                                 if r else "—")
+                print(f"| {name} | " + " | ".join(cells) + " |")
+        legacy = [r for r in report.results if r.config_source == "legacy-v1"]
+        if legacy:
+            print(f"\n*({len(legacy)} legacy v1 rows upgraded; analytic "
+                  f"figure rows keep their original table/name keys)*")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default="BENCH_*.json", metavar="GLOB",
+                    help="benchmark trajectory files to render "
+                         "(default: BENCH_*.json in the cwd)")
+    ap.add_argument("--no-dryrun", action="store_true",
+                    help="skip the dry-run roofline tables")
+    args = ap.parse_args(argv)
+    if not args.no_dryrun:
+        dryrun_tables()
+    bench_tables(args.bench)
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,35 @@
+"""Unified measurement & scenario subsystem.
+
+The paper's method is disciplined cross-generation measurement: identical
+workloads, one timing protocol, results with enough provenance to replay
+the analysis.  This package is that spine for the whole repo:
+
+  timing        the one warmup/repeat/IQR-outlier timer (the autotuner and
+                every benchmark import it; nothing else times anything)
+  scenario      declarative Scenario registry — kernel x shape x dtype x
+                Strategy — covering every paper figure and user workloads
+  results       schema-versioned BenchResult/BenchReport (BENCH_*.json)
+  runner        run/sweep: resolve config (tuning registry aware), check
+                against the ref oracle, measure, project across the chip
+                lineage
+  cli           python -m repro.bench.cli {list,run,sweep}
+
+Import note: ``timing``/``results``/``scenario`` are imported eagerly (and
+in that order — ``tuning.autotuner`` imports ``repro.bench.timing`` while
+this package may itself be mid-import via ``tuning.search_space``);
+``runner``/``cli`` are plain submodules, import them directly.
+"""
+from . import timing                                        # noqa: F401
+from .timing import TimingStats, reject_outliers, time_callable
+from . import results                                       # noqa: F401
+from .results import (SCHEMA_VERSION, BenchReport, BenchResult,
+                      ResultSchemaMismatch)
+from . import scenario                                      # noqa: F401
+from .scenario import Scenario, get_scenario, register, scenarios
+
+__all__ = [
+    "BenchReport", "BenchResult", "ResultSchemaMismatch", "SCHEMA_VERSION",
+    "Scenario", "TimingStats", "get_scenario", "register",
+    "reject_outliers", "results", "scenario", "scenarios", "time_callable",
+    "timing",
+]

@@ -1,0 +1,204 @@
+"""Benchmark command line.
+
+    PYTHONPATH=src python -m repro.bench.cli list [--tag fig4]
+    PYTHONPATH=src python -m repro.bench.cli run --only fig3 --json out.json
+    PYTHONPATH=src python -m repro.bench.cli sweep --smoke --json BENCH.json
+
+``list`` prints registered scenarios without running anything.  ``run``
+measures the selected scenarios on this host.  ``sweep`` measures them AND
+projects each through the roofline model across the chip lineage (every
+``core.hardware`` Chip, or ``--chip`` to restrict).  ``--json -`` writes
+the schema-v2 report to stdout and keeps all progress on stderr, so the
+output is machine-parseable.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import sys
+from typing import List, Optional
+
+from ..core import hardware
+from ..core.async_pipeline import Strategy
+from ..tuning.registry import Registry
+from . import runner, scenario
+from .results import BenchReport
+
+
+def _strategy(text: Optional[str]) -> Optional[Strategy]:
+    if not text:
+        return None
+    try:
+        return Strategy(text)
+    except ValueError:
+        raise SystemExit(f"error: unknown strategy {text!r}; known: "
+                         f"{[s.value for s in Strategy]}")
+
+
+def _filters(args) -> dict:
+    return dict(only=args.only, kernel=args.kernel,
+                strategy=_strategy(args.strategy), tag=args.tag,
+                smoke=True if getattr(args, "smoke", False) else None)
+
+
+def _select(args) -> List[scenario.Scenario]:
+    scs = scenario.scenarios(**_filters(args))
+    if not scs:
+        print("error: no scenarios match the given filters",
+              file=sys.stderr)
+        raise SystemExit(2)
+    return scs
+
+
+def _progress_stream(args):
+    return sys.stderr if args.json == "-" else sys.stdout
+
+
+def _emit(stream):
+    def emit(r):
+        m = r.metrics
+        val = (f"us_median={m['us_median']:.1f}" if "us_median" in m
+               else f"predicted_us={m['predicted_us']:.2f}")
+        extra = ""
+        if "max_err" in m:
+            extra = f" max_err={m['max_err']:.2e}" + \
+                ("" if m.get("check_ok", True) else " CHECK-FAILED")
+        print(f"{r.kind:<9s}{r.scenario:<36s} chip={r.chip:<10s} "
+              f"strategy={r.strategy:<16s} {val}{extra}",
+              file=stream, flush=True)
+    return emit
+
+
+def _options(args, stream) -> runner.RunOptions:
+    return runner.RunOptions(
+        warmup=args.warmup, repeats=args.repeats,
+        interpret=not args.compiled, check=not args.no_check,
+        use_tuned=not args.no_tuned, chip=getattr(args, "chip", None),
+        registry=Registry(args.registry) if args.registry else None,
+        emit=_emit(stream))
+
+
+def _write_json(report: BenchReport, args, stream) -> None:
+    if not args.json:
+        return
+    if args.json == "-":
+        report.save(sys.stdout)
+    else:
+        report.save(args.json)
+        print(f"# wrote {len(report)} rows to {args.json}", file=stream)
+
+
+def cmd_list(args) -> int:
+    scs = scenario.scenarios(**_filters(args))
+    if not scs:
+        print("no scenarios match the given filters", file=sys.stderr)
+        return 2
+    print(f"{'name':<36s} {'kernel':<16s} {'shape':<14s} {'strategy':<16s} "
+          f"{'tags':<14s} smoke")
+    for sc in scs:
+        strat = sc.strategy.value if sc.strategy else "(default)"
+        print(f"{sc.name:<36s} {sc.kernel:<16s} "
+              f"{'x'.join(map(str, sc.shape)):<14s} {strat:<16s} "
+              f"{','.join(sc.tags):<14s} {'y' if sc.smoke else 'n'}")
+    print(f"# {len(scs)} scenarios")
+    return 0
+
+
+def cmd_run(args) -> int:
+    stream = _progress_stream(args)
+    scs = _select(args)
+    opts = _options(args, stream)
+    report = runner.run_scenarios(scs, opts)
+    bad = [r for r in report.results
+           if r.metrics.get("check_ok") is False]
+    _write_json(report, args, stream)
+    if bad:
+        print(f"error: {len(bad)} scenario(s) failed the oracle check: "
+              f"{[r.scenario for r in bad]}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_sweep(args) -> int:
+    stream = _progress_stream(args)
+    if args.smoke and not (args.only or args.kernel or args.strategy
+                           or args.tag):
+        scs = scenario.scenarios(smoke=True)
+    else:
+        scs = _select(args)
+    chips = args.chip or list(hardware.CATALOG)
+    opts = _options(args, stream)
+    # --chip restricts the model projection, not the host's provenance chip
+    opts.chip = None
+    report = runner.sweep(scs, chips, opts)
+    measured = sum(1 for r in report.results if r.kind == "measured")
+    print(f"# sweep: {measured} measured rows + "
+          f"{len(report) - measured} model rows over {len(chips)} chips",
+          file=stream)
+    _write_json(report, args, stream)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.bench.cli",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("-v", "--verbose", action="store_true")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def add_filters(p):
+        p.add_argument("--only", default=None,
+                       help="substring filter over scenario names")
+        p.add_argument("--kernel", choices=scenario.KERNELS, default=None)
+        p.add_argument("--strategy", default=None,
+                       help="async strategy filter "
+                            f"({[s.value for s in Strategy]})")
+        p.add_argument("--tag", default=None,
+                       help="scenario tag filter (smoke/fig3/fig4/paper)")
+        p.add_argument("--smoke", action="store_true",
+                       help="only smoke-tagged scenarios")
+
+    def add_measure(p):
+        p.add_argument("--repeats", type=int, default=5)
+        p.add_argument("--warmup", type=int, default=1)
+        p.add_argument("--no-check", action="store_true",
+                       help="skip the ref-oracle correctness check")
+        p.add_argument("--no-tuned", action="store_true",
+                       help="ignore the tuning registry; seed defaults only")
+        p.add_argument("--compiled", action="store_true",
+                       help="compile for the real backend instead of the "
+                            "CPU Pallas interpreter (use on TPU)")
+        p.add_argument("--registry", default=None,
+                       help="tuning registry JSON to resolve configs from")
+        p.add_argument("--json", default=None, metavar="PATH",
+                       help="write the schema-v2 report ('-' for stdout; "
+                            "progress then goes to stderr)")
+
+    p = sub.add_parser("list", help="print registered scenarios (no run)")
+    add_filters(p)
+    p.set_defaults(fn=cmd_list)
+
+    p = sub.add_parser("run", help="measure scenarios on this host")
+    add_filters(p)
+    add_measure(p)
+    p.add_argument("--chip", default=None, choices=sorted(hardware.CATALOG),
+                   help="provenance/tuning-lookup chip (default: TARGET)")
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("sweep",
+                       help="measure + roofline-project across the lineage")
+    add_filters(p)
+    add_measure(p)
+    p.add_argument("--chip", action="append", default=None,
+                   choices=sorted(hardware.CATALOG), metavar="CHIP",
+                   help="restrict the projection (repeatable; default: "
+                        "every registered chip)")
+    p.set_defaults(fn=cmd_sweep)
+
+    args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.INFO if args.verbose
+                        else logging.WARNING)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

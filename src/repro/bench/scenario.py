@@ -1,0 +1,240 @@
+"""Declarative benchmark scenarios: kernel x shape x dtype x strategy.
+
+A ``Scenario`` names one concrete workload — a Pallas kernel at a shape and
+dtype, optionally pinned to one async ``Strategy`` and extra config/workload
+parameters — so every paper figure and every ad-hoc experiment is an entry
+in one registry: enumerable (``scenarios()``), filterable (``--only``,
+``--kernel``, ``--strategy``, ``--tag``) and individually runnable
+(``repro.bench.runner`` / ``python -m repro.bench.cli run``).
+
+Input construction and the analytic (flops, bytes, vmem) models are shared
+with the autotuner via ``tuning.search_space.SPECS`` — a scenario and a
+tuning task of the same cell can never disagree about the workload.  What
+this module adds on top is the *call adapter* (workload parameters such as
+``iters``/``penalty`` that the tuner holds fixed) and the correctness oracle
+from ``kernels.ref``.
+
+Registering a new workload::
+
+    from repro.bench.scenario import Scenario, register
+
+    register(Scenario(name="mine/stream_hot", kernel="stream",
+                      shape=(1024, 256), workload={"iters": 64},
+                      tags=("mine",)))
+
+``strategy=None`` means "whatever the resolved default is" — the tuning
+registry's winner when one exists, the seed constant otherwise — which is
+exactly what a production call site would get.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from ..core.async_pipeline import Strategy
+from ..kernels import ops, ref
+from ..tuning.search_space import KERNELS, SPECS
+
+__all__ = ["Scenario", "register", "get_scenario", "scenarios",
+           "scenario_names", "call_kernel", "check_output", "CHECK_TOL",
+           "KERNELS"]
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One runnable benchmark cell."""
+    name: str                            # unique, hierarchical: "fig3/..."
+    kernel: str                          # key into tuning SPECS / ops
+    shape: Tuple[int, ...]               # the SPECS shape convention
+    dtype: str = "float32"
+    strategy: Optional[Strategy] = None  # None -> resolved default/tuned
+    config: Dict[str, Any] = field(default_factory=dict)   # tile overrides
+    workload: Dict[str, Any] = field(default_factory=dict) # iters/penalty/..
+    tags: Tuple[str, ...] = ()
+    smoke: bool = False                  # include in `sweep --smoke`
+    section: str = ""                    # paper figure/table it feeds
+
+    def __post_init__(self):
+        if self.kernel not in SPECS:
+            raise KeyError(f"unknown kernel {self.kernel!r}; "
+                           f"known: {tuple(SPECS)}")
+        object.__setattr__(self, "shape",
+                           tuple(int(s) for s in self.shape))
+
+    def make_args(self) -> Tuple:
+        return SPECS[self.kernel].make_args(self.shape, self.dtype)
+
+    def matches(self, *, only: Optional[str] = None,
+                kernel: Optional[str] = None,
+                strategy: Optional[Strategy] = None,
+                tag: Optional[str] = None,
+                smoke: Optional[bool] = None) -> bool:
+        if only is not None and only not in self.name:
+            return False
+        if kernel is not None and kernel != self.kernel:
+            return False
+        if strategy is not None and self.strategy not in (None, strategy):
+            return False
+        if tag is not None and tag not in self.tags:
+            return False
+        if smoke is not None and self.smoke != smoke:
+            return False
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Call adapters + correctness oracles
+# ---------------------------------------------------------------------------
+
+#: kernel -> fn(args, config, workload, interpret) -> jax value.  The config
+#: dict holds exactly the KERNEL_DEFAULTS keys; workload holds the
+#: non-tunable problem parameters a figure sweeps (intensity, penalty, ...).
+CALLERS: Dict[str, Callable[..., Any]] = {
+    "stream": lambda a, cfg, w, i: ops.stream(
+        a[0], iters=w.get("iters", 4), interpret=i, **cfg),
+    "hotspot": lambda a, cfg, w, i: ops.hotspot(
+        a[0], a[1], iters=w.get("iters", 1), grid=w.get("grid", 1),
+        interpret=i, **cfg),
+    "pathfinder": lambda a, cfg, w, i: ops.pathfinder(
+        a[0], interpret=i, **cfg),
+    "nw": lambda a, cfg, w, i: ops.nw(
+        a[0], penalty=w.get("penalty", 10), interpret=i, **cfg),
+    "lud": lambda a, cfg, w, i: ops.lud(a[0], interpret=i, **cfg),
+    "matmul": lambda a, cfg, w, i: ops.matmul(a[0], a[1], interpret=i,
+                                              **cfg),
+    "flash_attention": lambda a, cfg, w, i: ops.flash_attention(
+        a[0], a[1], a[2], causal=w.get("causal", True), interpret=i, **cfg),
+}
+
+#: kernel -> fn(args, workload) -> reference output (kernels.ref oracle).
+ORACLES: Dict[str, Callable[..., Any]] = {
+    "stream": lambda a, w: ref.stream_ref(a[0], iters=w.get("iters", 4)),
+    "hotspot": lambda a, w: ref.hotspot_ref(a[0], a[1],
+                                            iters=w.get("iters", 1)),
+    "pathfinder": lambda a, w: ref.pathfinder_ref(a[0]),
+    "nw": lambda a, w: ref.nw_ref(a[0], w.get("penalty", 10)),
+    "lud": lambda a, w: ref.lud_ref(a[0]),
+    "matmul": lambda a, w: ref.matmul_ref(a[0], a[1]),
+    "flash_attention": lambda a, w: ref.attention_ref(
+        a[0], a[1], a[2], causal=w.get("causal", True)),
+}
+
+#: max |kernel - oracle| each kernel is held to in interpret mode.
+CHECK_TOL: Dict[str, float] = {
+    "stream": 1e-5, "hotspot": 1e-2, "pathfinder": 0.5, "nw": 1e-3,
+    "lud": 1e-2, "matmul": 1e-2, "flash_attention": 2e-2,
+}
+
+
+def call_kernel(sc: Scenario, args: Tuple, config: Dict[str, Any],
+                interpret: bool = True):
+    return CALLERS[sc.kernel](args, config, sc.workload, interpret)
+
+
+def check_output(sc: Scenario, args: Tuple, out) -> float:
+    """Max abs error of ``out`` against the pure-jnp oracle.  Pathfinder's
+    kernel returns a (1, cols) row; compare the row itself."""
+    want = ORACLES[sc.kernel](args, sc.workload)
+    got = out
+    if sc.kernel == "pathfinder":
+        got = jnp.asarray(out)[0]
+    return float(jnp.max(jnp.abs(jnp.asarray(got, jnp.float32)
+                                 - jnp.asarray(want, jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(sc: Scenario) -> Scenario:
+    """Add ``sc`` to the global registry; re-registering the same name with
+    a different definition is an error (silent shadowing hides typos)."""
+    existing = _SCENARIOS.get(sc.name)
+    if existing is not None and existing != sc:
+        raise ValueError(f"scenario {sc.name!r} already registered "
+                         f"with a different definition")
+    _SCENARIOS[sc.name] = sc
+    return sc
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; run "
+                       f"`python -m repro.bench.cli list`") from None
+
+
+def scenarios(*, only: Optional[str] = None, kernel: Optional[str] = None,
+              strategy: Optional[Strategy] = None, tag: Optional[str] = None,
+              smoke: Optional[bool] = None) -> List[Scenario]:
+    return [s for _, s in sorted(_SCENARIOS.items())
+            if s.matches(only=only, kernel=kernel, strategy=strategy,
+                         tag=tag, smoke=smoke)]
+
+
+def scenario_names(**filters) -> List[str]:
+    return [s.name for s in scenarios(**filters)]
+
+
+# ---------------------------------------------------------------------------
+# Default scenario set
+# ---------------------------------------------------------------------------
+
+#: shapes small enough that interpret mode on a CPU stays in milliseconds;
+#: chosen to match the shapes the paper-figure benchmarks always used.
+_SMOKE_SHAPES: Dict[str, Tuple[int, ...]] = {
+    "stream": (256, 256),
+    "hotspot": (32, 126),
+    "pathfinder": (33, 128),
+    "nw": (32,),
+    "lud": (64,),
+    "matmul": (256, 256, 256),
+    "flash_attention": (2, 256, 64),
+}
+
+_SMOKE_WORKLOADS: Dict[str, Dict[str, Any]] = {
+    "stream": {"iters": 4},
+    "hotspot": {"iters": 2},
+}
+
+
+def _register_defaults() -> None:
+    # one fast cell per kernel — the CI trajectory sweep
+    for kernel, shape in _SMOKE_SHAPES.items():
+        register(Scenario(
+            name=f"smoke/{kernel}", kernel=kernel, shape=shape,
+            workload=dict(_SMOKE_WORKLOADS.get(kernel, {})),
+            tags=("smoke",), smoke=True, section="smoke"))
+
+    # paper Fig. 3: the async-copy microbenchmark, strategy x intensity
+    for strategy in Strategy:
+        for iters in (1, 32):
+            register(Scenario(
+                name=f"fig3/stream/{strategy.value}/iters={iters}",
+                kernel="stream", shape=(256, 256), strategy=strategy,
+                config={"tile_rows": 16, "n_tiles": 8},
+                workload={"iters": iters},
+                tags=("fig3", "paper"), section="fig3"))
+
+    # paper Fig. 4: the four Rodinia kernels x every async strategy
+    fig4 = {
+        "hotspot": ((32, 126), {"iters": 2}),
+        "pathfinder": ((33, 128), {}),
+        "nw": ((32,), {}),
+        "lud": ((64,), {}),
+    }
+    for kernel, (shape, workload) in fig4.items():
+        for strategy in Strategy:
+            register(Scenario(
+                name=f"fig4/{kernel}/{strategy.value}", kernel=kernel,
+                shape=shape, strategy=strategy, workload=dict(workload),
+                tags=("fig4", "paper"), section="fig4"))
+
+
+_register_defaults()

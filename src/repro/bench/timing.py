@@ -1,0 +1,77 @@
+"""The canonical measurement primitive for every benchmark and the tuner.
+
+One timing discipline for the whole repo — the paper's methodology (warmup
+calls to exclude compilation/tracing, ``repeats`` timed calls, one-sided
+IQR outlier rejection before the median is taken) lives here and only here.
+``tuning.autotuner`` and every ``repro.bench`` scenario import this module;
+no other file may hand-roll a perf_counter loop.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, List
+
+import jax
+
+__all__ = ["TimingStats", "time_callable", "reject_outliers"]
+
+
+@dataclass
+class TimingStats:
+    """Per-call wall-clock statistics over the post-rejection samples."""
+    times_us: List[float]
+    n_outliers: int = 0
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times_us) if self.times_us else 0.0
+
+    @property
+    def mean(self) -> float:
+        return statistics.fmean(self.times_us) if self.times_us else 0.0
+
+    @property
+    def best(self) -> float:
+        return min(self.times_us) if self.times_us else 0.0
+
+    @property
+    def std(self) -> float:
+        return statistics.pstdev(self.times_us) \
+            if len(self.times_us) > 1 else 0.0
+
+    def to_metrics(self) -> dict:
+        """The flat metric dict every result row carries."""
+        return {"us_median": self.median, "us_mean": self.mean,
+                "us_min": self.best, "us_std": self.std,
+                "n_trials": len(self.times_us),
+                "n_outliers": self.n_outliers}
+
+
+def time_callable(fn: Callable[[], Any], *, warmup: int = 1,
+                  repeats: int = 5, outlier_iqr: float = 3.0) -> TimingStats:
+    """Wall-time ``fn`` (which must return a jax value to block on).
+    ``warmup=0`` is honored: first-call compile cost lands in the timings."""
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e6)
+    kept = reject_outliers(times, outlier_iqr)
+    return TimingStats(times_us=kept, n_outliers=len(times) - len(kept))
+
+
+def reject_outliers(times: List[float], k: float) -> List[float]:
+    """Drop samples above median + k*IQR (one-sided: slow outliers only —
+    preemptions / GC pauses inflate, nothing deflates, a timing)."""
+    if len(times) < 4 or k <= 0:
+        return list(times)
+    s = sorted(times)
+    q1 = s[len(s) // 4]
+    q3 = s[(3 * len(s)) // 4]
+    cut = statistics.median(s) + k * max(q3 - q1, 1e-9)
+    kept = [t for t in times if t <= cut]
+    return kept or list(times)

@@ -1,23 +1,21 @@
 """Empirical autotuner: time the surviving candidates, cache the winner.
 
-The measurement protocol follows the paper's methodology: warmup calls
-(compilation / tracing excluded), ``repeats`` timed calls, and outlier
-rejection (trim above median + k*IQR) before the median is taken as the
-candidate's time.  The hard-coded default config is always measured even if
-the analytic model pruned it, so every record carries a tuned-vs-default
-speedup with full provenance.
+Measurement uses the repo's one canonical timing protocol —
+``repro.bench.timing`` (warmup calls excluding compilation/tracing,
+``repeats`` timed calls, one-sided IQR outlier rejection, median) — this
+module owns no timing loop of its own.  The hard-coded default config is
+always measured even if the analytic model pruned it, so every record
+carries a tuned-vs-default speedup with full provenance.
 """
 from __future__ import annotations
 
 import datetime
 import logging
-import statistics
-import time
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
+from ..bench.timing import TimingStats, time_callable   # noqa: F401  (re-export)
 from ..core import hardware
 from ..core.async_pipeline import Strategy
 from ..kernels import ops
@@ -25,57 +23,6 @@ from .registry import Measurement, Registry, TuningRecord
 from .search_space import Candidate, TuningTask, default_task
 
 log = logging.getLogger("repro.tuning")
-
-
-@dataclass
-class TimingStats:
-    times_us: List[float]
-    n_outliers: int = 0
-
-    @property
-    def median(self) -> float:
-        return statistics.median(self.times_us) if self.times_us else 0.0
-
-    @property
-    def mean(self) -> float:
-        return statistics.fmean(self.times_us) if self.times_us else 0.0
-
-    @property
-    def best(self) -> float:
-        return min(self.times_us) if self.times_us else 0.0
-
-    @property
-    def std(self) -> float:
-        return statistics.pstdev(self.times_us) \
-            if len(self.times_us) > 1 else 0.0
-
-
-def time_callable(fn: Callable[[], Any], *, warmup: int = 1,
-                  repeats: int = 5, outlier_iqr: float = 3.0) -> TimingStats:
-    """Wall-time ``fn`` (which must return a jax value to block on).
-    ``warmup=0`` is honored: first-call compile cost lands in the timings."""
-    for _ in range(max(warmup, 0)):
-        jax.block_until_ready(fn())
-    times = []
-    for _ in range(max(repeats, 1)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        times.append((time.perf_counter() - t0) * 1e6)
-    kept = _reject_outliers(times, outlier_iqr)
-    return TimingStats(times_us=kept, n_outliers=len(times) - len(kept))
-
-
-def _reject_outliers(times: List[float], k: float) -> List[float]:
-    """Drop samples above median + k*IQR (one-sided: slow outliers only —
-    preemptions / GC pauses inflate, nothing deflates, a timing)."""
-    if len(times) < 4 or k <= 0:
-        return list(times)
-    s = sorted(times)
-    q1 = s[len(s) // 4]
-    q3 = s[(3 * len(s)) // 4]
-    cut = statistics.median(s) + k * max(q3 - q1, 1e-9)
-    kept = [t for t in times if t <= cut]
-    return kept or list(times)
 
 
 class Autotuner:
@@ -214,17 +161,21 @@ def tuned(kernel: str, shape: Sequence[int], dtype: str = "float32", *,
           fallback_to_default: bool = True) -> Optional[Dict[str, Any]]:
     """Best known config for (kernel, shape, dtype, chip), decoded and ready
     to splat into the ops wrapper:  ``ops.stream(x, **tuned("stream",
-    x.shape))``.  On a registry miss falls back to the kernel's *current*
-    default config — which may itself be a tuned install from
-    ``apply_registry_defaults`` (use ``ops.seed_default_config`` for the
-    original constants) — or returns None if ``fallback_to_default=False``.
+    x.shape))``.  On a registry miss falls back to the kernel's SEED
+    constants, never to an ``apply_registry_defaults`` install: an installed
+    winner was tuned at some *other* (usually larger) shape, and splatting
+    it as explicit kwargs would bypass the wrappers' degrade-to-seed net
+    (explicit arguments are treated as user intent and never overridden) —
+    crashing shapes the install does not tile.  Call the wrapper with no
+    config kwargs to use installed defaults with graceful fallback.
+    Returns None on a miss if ``fallback_to_default=False``.
     """
     reg = registry if registry is not None else _default_registry()
     rec = reg.get(kernel, tuple(int(s) for s in shape), dtype,
                   chip or hardware.TARGET.name, interpret)
     if rec is not None:
         return decode_config(rec.best)
-    return ops.default_config(kernel) if fallback_to_default else None
+    return ops.seed_default_config(kernel) if fallback_to_default else None
 
 
 def apply_registry_defaults(registry: Optional[Registry] = None, *,

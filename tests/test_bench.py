@@ -1,0 +1,276 @@
+"""repro.bench subsystem tests: canonical timing (regression-locked to the
+seed autotuner's statistics), scenario registry + CLI list, schema-v2
+result round-trip with v1 upgrade, and runner provenance."""
+import json
+import os
+import statistics
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro.bench import (BenchReport, BenchResult, ResultSchemaMismatch,
+                         SCHEMA_VERSION, Scenario, TimingStats, register,
+                         scenarios, time_callable)
+from repro.bench import runner, scenario as scenario_mod
+from repro.bench.cli import main as bench_cli_main
+from repro.bench.results import upgrade_v1_row
+from repro.bench.timing import reject_outliers
+from repro.core import hardware
+from repro.core.async_pipeline import Strategy
+from repro.tuning import Measurement, Registry, TuningRecord, make_key
+
+
+# --- timing: identical statistics to the seed autotuner's implementation ---
+
+def _seed_reject_outliers(times, k):
+    """The deleted tuning/autotuner.py:_reject_outliers, verbatim — the
+    regression oracle for the shared implementation."""
+    if len(times) < 4 or k <= 0:
+        return list(times)
+    s = sorted(times)
+    q1 = s[len(s) // 4]
+    q3 = s[(3 * len(s)) // 4]
+    cut = statistics.median(s) + k * max(q3 - q1, 1e-9)
+    kept = [t for t in times if t <= cut]
+    return kept or list(times)
+
+
+@pytest.mark.parametrize("times", [
+    [],
+    [5.0],
+    [1.0, 2.0, 3.0],                       # < 4 samples: untouched
+    [10.0, 11.0, 12.0, 13.0, 14.0],        # tight: nothing rejected
+    [10.0, 11.0, 12.0, 13.0, 500.0],       # one slow outlier
+    [1.0, 1.0, 1.0, 1.0, 1.0],             # zero IQR: epsilon path
+    [100.0, 3.0, 2.0, 1.0, 2.5, 2.0],      # outlier first, order kept
+    [9e9, 9e9, 9e9, 9e9],                  # all identical huge
+])
+def test_reject_outliers_matches_seed_autotuner(times):
+    for k in (0.0, 1.5, 3.0):
+        assert reject_outliers(times, k) == _seed_reject_outliers(times, k)
+
+
+def test_timing_stats_match_statistics_module():
+    s = TimingStats(times_us=[4.0, 1.0, 3.0, 2.0], n_outliers=1)
+    assert s.median == statistics.median([4.0, 1.0, 3.0, 2.0])
+    assert s.mean == statistics.fmean([4.0, 1.0, 3.0, 2.0])
+    assert s.best == 1.0
+    assert s.std == statistics.pstdev([4.0, 1.0, 3.0, 2.0])
+    m = s.to_metrics()
+    assert m["n_trials"] == 4 and m["n_outliers"] == 1
+    assert m["us_median"] == s.median
+    empty = TimingStats(times_us=[])
+    assert (empty.median, empty.mean, empty.best, empty.std) == (0, 0, 0, 0)
+
+
+def test_time_callable_counts_warmup_and_repeats():
+    calls = []
+    fn = lambda: (calls.append(1), jnp.zeros(()))[1]
+    stats = time_callable(fn, warmup=2, repeats=3, outlier_iqr=0)
+    assert len(calls) == 5
+    assert len(stats.times_us) == 3
+    calls.clear()
+    time_callable(fn, warmup=0, repeats=1)      # warmup=0 honored
+    assert len(calls) == 1
+
+
+def test_autotuner_owns_no_timing_loop():
+    """The tuner must import the canonical timer, not hand-roll one."""
+    from repro.tuning import autotuner
+    from repro.bench import timing
+    assert autotuner.time_callable is timing.time_callable
+    assert autotuner.TimingStats is timing.TimingStats
+    src = open(autotuner.__file__).read()
+    assert "perf_counter" not in src
+
+
+# --- scenario registry ------------------------------------------------------
+
+def test_default_scenarios_cover_every_kernel():
+    smoke = scenarios(smoke=True)
+    assert {s.kernel for s in smoke} == set(scenario_mod.KERNELS)
+
+
+def test_scenario_filters():
+    assert all(s.kernel == "stream" for s in scenarios(kernel="stream"))
+    fig4 = scenarios(tag="fig4")
+    assert {s.kernel for s in fig4} == {"hotspot", "pathfinder", "nw", "lud"}
+    overlap = scenarios(tag="fig4", strategy=Strategy.OVERLAP)
+    assert all(s.strategy in (None, Strategy.OVERLAP) for s in overlap)
+    assert scenarios(only="no-such-scenario") == []
+
+
+def test_scenario_register_rejects_redefinition_and_unknown_kernel():
+    sc = Scenario(name="test/tmp-cell", kernel="stream", shape=(64, 128))
+    assert register(sc) is sc
+    register(sc)                                 # idempotent re-register
+    with pytest.raises(ValueError):
+        register(Scenario(name="test/tmp-cell", kernel="stream",
+                          shape=(128, 128)))
+    with pytest.raises(KeyError):
+        Scenario(name="test/bad", kernel="not-a-kernel", shape=(1,))
+
+
+def test_cli_list_runs_nothing(capsys, monkeypatch):
+    """`cli list` must enumerate without measuring a single kernel."""
+    def boom(*a, **k):
+        raise AssertionError("list must not time anything")
+    monkeypatch.setattr(runner, "run_scenario", boom)
+    monkeypatch.setattr(scenario_mod, "call_kernel", boom)
+    assert bench_cli_main(["list"]) == 0
+    out = capsys.readouterr().out
+    for kernel in scenario_mod.KERNELS:
+        assert f"smoke/{kernel}" in out
+    assert bench_cli_main(["list", "--tag", "fig3"]) == 0
+    out = capsys.readouterr().out
+    assert "fig3/stream/overlap/iters=1" in out and "fig4" not in out
+
+
+# --- results schema ---------------------------------------------------------
+
+def _result(**kw):
+    base = dict(
+        scenario="smoke/stream", kernel="stream", shape=[256, 256],
+        dtype="float32", strategy="overlap", chip="TPUv5e",
+        metrics={"us_median": 12.5, "check_ok": True},
+        config={"strategy": "overlap", "tile_rows": 8, "n_tiles": 4,
+                "depth": 2},
+        config_source="tuned", tuned_key="stream|256x256|float32|TPUv5e|interpret",
+        kind="measured", section="smoke", interpret=True, backend="cpu",
+        jax_version="0.4.37", created_at="2026-08-02T00:00:00+00:00")
+    base.update(kw)
+    return BenchResult(**base)
+
+
+def test_report_round_trip_preserves_provenance(tmp_path):
+    path = str(tmp_path / "BENCH_test.json")
+    report = BenchReport(jax_version="0.4.37", backend="cpu")
+    report.add(_result())
+    report.save(path)
+    raw = json.load(open(path))
+    assert raw["schema_version"] == SCHEMA_VERSION == 2
+    got = BenchReport.load(path)
+    assert len(got) == 1
+    r = got.results[0]
+    assert r == _result()               # every field, incl. provenance
+    assert r.chip == "TPUv5e" and r.strategy == "overlap"
+    assert r.config_source == "tuned"
+    assert r.tuned_key == "stream|256x256|float32|TPUv5e|interpret"
+
+
+def test_v1_payload_upgraded_on_load(tmp_path):
+    """The schema 1 -> 2 bump: old benchmarks/run.py payloads load as v2
+    rows instead of being misread or rejected."""
+    path = str(tmp_path / "BENCH_old.json")
+    v1 = {"schema_version": 1,
+          "rows": [{"table": "fig3a", "name": "iters=4",
+                    "section": "Fig3a: model",
+                    "metrics": {"intensity": 1.0, "overlap": 1.4}}]}
+    json.dump(v1, open(path, "w"))
+    got = BenchReport.load(path)
+    r = got.results[0]
+    assert r.scenario == "fig3a/iters=4"
+    assert r.section == "Fig3a: model"
+    assert r.metrics == {"intensity": 1.0, "overlap": 1.4}
+    assert r.config_source == "legacy-v1"
+    # and a re-save emits current-schema v2
+    got.save(path)
+    assert json.load(open(path))["schema_version"] == 2
+
+
+def test_unknown_schema_version_raises():
+    with pytest.raises(ResultSchemaMismatch):
+        BenchReport.from_dict({"schema_version": 99, "rows": []})
+    assert upgrade_v1_row({}).config_source == "legacy-v1"
+
+
+# --- runner -----------------------------------------------------------------
+
+def test_run_scenario_records_full_provenance(tmp_path):
+    sc = scenario_mod.get_scenario("smoke/stream")
+    reg = Registry(str(tmp_path / "reg.json"))
+    opts = runner.RunOptions(warmup=1, repeats=2, registry=reg)
+    r = runner.run_scenario(sc, opts)
+    assert r.kernel == "stream" and r.shape == [256, 256]
+    assert r.chip == hardware.TARGET.name
+    assert r.strategy == "overlap"              # seed default strategy
+    assert r.config_source == "default" and r.tuned_key is None
+    assert r.kind == "measured" and r.interpret
+    assert r.jax_version and r.backend and r.created_at
+    m = r.metrics
+    assert m["n_trials"] == 2 and m["us_median"] > 0
+    assert m["check_ok"] and m["max_err"] <= scenario_mod.CHECK_TOL["stream"]
+    assert m["predicted_us"] > 0
+
+
+def test_run_scenario_resolves_tuned_config(tmp_path):
+    """A tuning-registry winner for the exact cell must win over the seed
+    default, and the row must say so."""
+    sc = scenario_mod.get_scenario("smoke/stream")
+    reg = Registry(str(tmp_path / "reg.json"))
+    best = {"strategy": "register_bypass", "tile_rows": 16, "n_tiles": 4,
+            "depth": 2}
+    reg.put(TuningRecord(
+        kernel="stream", shape=list(sc.shape), dtype="float32",
+        chip=hardware.TARGET.name, best=best, best_us=10.0,
+        measurements=[Measurement(config=best, us_median=10.0)],
+        interpret=True))
+    r = runner.run_scenario(sc, runner.RunOptions(repeats=1, registry=reg))
+    assert r.config_source == "tuned"
+    assert r.tuned_key == make_key("stream", sc.shape, "float32",
+                                   hardware.TARGET.name, True)
+    assert r.strategy == "register_bypass"
+    assert r.config["tile_rows"] == 16
+
+
+def test_project_scenario_covers_the_lineage():
+    sc = scenario_mod.get_scenario("smoke/stream")
+    rows = [runner.project_scenario(sc, chip) for chip in ("K80", "A100")]
+    assert [r.chip for r in rows] == ["K80", "A100"]
+    for r in rows:
+        assert r.kind == "model"
+        assert r.metrics["predicted_us"] > 0
+        assert r.metrics["bound"] in ("compute", "memory")
+    # newer silicon must never be predicted slower on the same workload
+    assert rows[1].metrics["predicted_us"] <= rows[0].metrics["predicted_us"]
+
+
+def test_cli_run_writes_machine_parseable_json(tmp_path, capsys):
+    out = str(tmp_path / "row.json")
+    rc = bench_cli_main(["run", "--only", "smoke/stream", "--repeats", "1",
+                         "--registry", str(tmp_path / "reg.json"),
+                         "--json", out])
+    assert rc == 0
+    d = json.load(open(out))
+    assert d["schema_version"] == 2 and len(d["rows"]) == 1
+    capsys.readouterr()
+
+
+# --- benchmarks/run.py shim -------------------------------------------------
+
+def _import_benchmarks_run():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks import run as bench_run
+    return bench_run
+
+
+def test_run_py_json_dash_keeps_stdout_pure(capsys):
+    """--json - : the JSON payload owns stdout; progress goes to stderr."""
+    bench_run = _import_benchmarks_run()
+    bench_run.main(["--only", "bench_balance", "--json", "-"])
+    captured = capsys.readouterr()
+    payload = json.loads(captured.out)          # must parse as-is
+    assert payload["schema_version"] == 2
+    assert payload["rows"]
+    assert "====" in captured.err               # progress went to stderr
+
+
+def test_run_py_list_flag(capsys):
+    bench_run = _import_benchmarks_run()
+    bench_run.main(["--list"])
+    out = capsys.readouterr().out
+    assert "bench_balance(Fig1+S6)" in out
+    assert "smoke/stream" in out                # scenario registry included
