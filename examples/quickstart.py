@@ -112,6 +112,31 @@ def main():
     #   python -m repro.bench.cli run --only fig3         # one figure
     #   python -m repro.bench.cli sweep --smoke --json BENCH_sweep.json
 
+    # --- N-stage pipelines + the regime map ---------------------------------
+    # Every kernel's async pipeline has a first-class shape: ring depth
+    # (VMEM slots, not just double-buffering), wait_group (how many copies
+    # may still be in flight when compute starts — the TPU analogue of
+    # cp.async.wait_group N) and out_depth (write-back ring).  Pass them
+    # per call, or as a PipelineSpec to the *_pallas entry points.
+    y3 = ops.stream(x, iters=4, strategy="overlap", depth=3, wait_group=1)
+    print(f"stream depth=3 wait_group=1 ok, out={y3.shape}")
+
+    # The regime/* scenario family measures, per kernel, a sync baseline
+    # plus async at ring depths 2/3/4; sweep() folds the measurements into
+    # one "async pays / neutral / hurts" verdict row with the measured
+    # break-even depth.
+    regime_scs = scenarios(tag="regime", kernel="stream")
+    report = runner.sweep(regime_scs, chips=["TPUv5e"], opts=runner.RunOptions(
+        warmup=0, repeats=1, registry=registry))
+    (verdict,) = [r for r in report.results if r.kind == "regime"]
+    m = verdict.metrics
+    be = m["break_even_depth"]
+    print(f"regime: stream async {m['verdict']} "
+          f"(break-even depth={be if be is not None else '-'}, "
+          f"best=d{m['best_depth']}, {m['speedup']:.2f}x vs sync)")
+    # CLI equivalent:
+    #   python -m repro.bench.cli sweep --tag regime --json BENCH_regime.json
+
 
 if __name__ == "__main__":
     main()

@@ -77,6 +77,29 @@ def bench_tables(pattern):
                 print(f"| {r.scenario} | {r.chip} | {r.strategy} "
                       f"| {r.config_source} | {m.get('us_median', 0):,.1f} "
                       f"| {m.get('us_min', 0):,.1f} | {err} | {ok} |")
+        regime = [r for r in report.results if r.kind == "regime"]
+        if regime:
+            print("\n**Async regime map** (measured; best async strategy at "
+                  "each ring depth vs the sync baseline)\n")
+            depths = sorted({int(k[4:]) for r in regime for k in r.metrics
+                             if k.startswith("us_d")})
+            head = " | ".join(f"us@d{d}" for d in depths)
+            print(f"| kernel | shape | strategy | sync us | {head} "
+                  "| break-even | speedup | verdict |")
+            print("|---" * (7 + len(depths)) + "|")
+            for r in regime:
+                m = r.metrics
+                cells = " | ".join(
+                    f"{m[f'us_d{d}']:,.1f}" if f"us_d{d}" in m else "—"
+                    for d in depths)
+                be = m.get("break_even_depth")
+                verdict = m["verdict"]
+                if verdict != "neutral":
+                    verdict = f"**{verdict}**"
+                print(f"| {r.kernel} | {'x'.join(map(str, r.shape))} "
+                      f"| {r.strategy} | {m['baseline_us']:,.1f} | {cells} "
+                      f"| {f'd{be}' if be is not None else '—'} "
+                      f"| {m['speedup']:.2f}x | {verdict} |")
         model = [r for r in report.results
                  if r.kind == "model" and r.chip in REPORT_CHIPS]
         if model:

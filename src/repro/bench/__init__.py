@@ -12,6 +12,8 @@ the analysis.  This package is that spine for the whole repo:
   runner        run/sweep: resolve config (tuning registry aware), check
                 against the ref oracle, measure, project across the chip
                 lineage
+  regime        fold regime/* depth sweeps into per-cell "async pays /
+                async hurts" verdict rows (kind="regime")
   cli           python -m repro.bench.cli {list,run,sweep}
 
 Import note: ``timing``/``results``/``scenario`` are imported eagerly (and
@@ -26,10 +28,12 @@ from .results import (SCHEMA_VERSION, BenchReport, BenchResult,
                       ResultSchemaMismatch)
 from . import scenario                                      # noqa: F401
 from .scenario import Scenario, get_scenario, register, scenarios
+from . import regime                                        # noqa: F401
+from .regime import PAYS_MARGIN, regime_rows
 
 __all__ = [
-    "BenchReport", "BenchResult", "ResultSchemaMismatch", "SCHEMA_VERSION",
-    "Scenario", "TimingStats", "get_scenario", "register",
-    "reject_outliers", "results", "scenario", "scenarios", "time_callable",
-    "timing",
+    "BenchReport", "BenchResult", "PAYS_MARGIN", "ResultSchemaMismatch",
+    "SCHEMA_VERSION", "Scenario", "TimingStats", "get_scenario", "regime",
+    "regime_rows", "register", "reject_outliers", "results", "scenario",
+    "scenarios", "time_callable", "timing",
 ]

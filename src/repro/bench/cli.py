@@ -19,7 +19,7 @@ import sys
 from typing import List, Optional
 
 from ..core import hardware
-from ..core.async_pipeline import Strategy
+from ..core.async_pipeline import Strategy, parse_strategy
 from ..tuning.registry import Registry
 from . import runner, scenario
 from .results import BenchReport
@@ -29,10 +29,9 @@ def _strategy(text: Optional[str]) -> Optional[Strategy]:
     if not text:
         return None
     try:
-        return Strategy(text)
-    except ValueError:
-        raise SystemExit(f"error: unknown strategy {text!r}; known: "
-                         f"{[s.value for s in Strategy]}")
+        return parse_strategy(text)
+    except ValueError as e:
+        raise SystemExit(f"error: {e}")
 
 
 def _filters(args) -> dict:
@@ -57,8 +56,15 @@ def _progress_stream(args):
 def _emit(stream):
     def emit(r):
         m = r.metrics
-        val = (f"us_median={m['us_median']:.1f}" if "us_median" in m
-               else f"predicted_us={m['predicted_us']:.2f}")
+        if r.kind == "regime":          # derived verdict row, not a timing
+            be = m.get("break_even_depth")
+            val = (f"verdict={m['verdict']} "
+                   f"break_even_depth={be if be is not None else '-'} "
+                   f"speedup={m['speedup']:.2f}x")
+        elif "us_median" in m:
+            val = f"us_median={m['us_median']:.1f}"
+        else:
+            val = f"predicted_us={m['predicted_us']:.2f}"
         extra = ""
         if "max_err" in m:
             extra = f" max_err={m['max_err']:.2e}" + \
@@ -132,9 +138,19 @@ def cmd_sweep(args) -> int:
     opts.chip = None
     report = runner.sweep(scs, chips, opts)
     measured = sum(1 for r in report.results if r.kind == "measured")
+    regime = [r for r in report.results if r.kind == "regime"]
     print(f"# sweep: {measured} measured rows + "
-          f"{len(report) - measured} model rows over {len(chips)} chips",
+          f"{len(report) - measured - len(regime)} model rows over "
+          f"{len(chips)} chips + {len(regime)} regime verdicts",
           file=stream)
+    for r in regime:
+        be = r.metrics.get("break_even_depth")
+        print(f"#   regime {r.kernel:<16s} "
+              f"{'x'.join(map(str, r.shape)):<14s} "
+              f"{r.metrics['verdict']:<8s} "
+              f"break-even depth={be if be is not None else '-'} "
+              f"best=d{r.metrics['best_depth']} "
+              f"({r.metrics['speedup']:.2f}x vs sync)", file=stream)
     _write_json(report, args, stream)
     return 0
 
@@ -153,7 +169,8 @@ def main(argv=None) -> int:
                        help="async strategy filter "
                             f"({[s.value for s in Strategy]})")
         p.add_argument("--tag", default=None,
-                       help="scenario tag filter (smoke/fig3/fig4/paper)")
+                       help="scenario tag filter "
+                            "(smoke/fig3/fig4/paper/regime)")
         p.add_argument("--smoke", action="store_true",
                        help="only smoke-tagged scenarios")
 

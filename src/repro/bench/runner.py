@@ -33,6 +33,7 @@ from ..tuning.registry import Registry
 from ..tuning.search_space import SPECS, predict_time
 from ..kernels import ops
 from ..kernels.stream import stream_flops_bytes
+from .regime import regime_rows
 from .results import BenchReport, BenchResult, now_iso
 from .scenario import (CHECK_TOL, Scenario, call_kernel, check_output,
                        scenarios)
@@ -140,6 +141,7 @@ def run_scenario(sc: Scenario, opts: Optional[RunOptions] = None, *,
     metrics["predicted_us"] = predict_time(
         cfg["strategy"], flops, nbytes, depth=int(cfg.get("depth", 2)),
         n_tiles=SPECS[sc.kernel].n_tiles(sc.shape, cfg),
+        wait_group=cfg.get("wait_group"),
         chip=hardware.get_chip(opts.resolved_chip())) * 1e6
 
     result = BenchResult(
@@ -171,7 +173,7 @@ def project_scenario(sc: Scenario, chip_name: str,
     t = predict_time(cfg["strategy"], flops, nbytes,
                      depth=int(cfg.get("depth", 2)),
                      n_tiles=SPECS[sc.kernel].n_tiles(sc.shape, cfg),
-                     chip=chip)
+                     wait_group=cfg.get("wait_group"), chip=chip)
     metrics = {"predicted_us": t * 1e6, "t_compute_us": t_c * 1e6,
                "t_memory_us": t_m * 1e6,
                "intensity": flops / nbytes if nbytes else 0.0,
@@ -219,4 +221,10 @@ def sweep(scs: Optional[Sequence[Scenario]] = None,
         for chip_name in chips:
             report.add(project_scenario(sc, chip_name, opts,
                                         resolved=resolved))
+    # fold any regime/* depth-sweep measurements into per-cell
+    # "async pays / async hurts" verdict rows (kind="regime")
+    for row in regime_rows(report.results):
+        report.add(row)
+        if opts.emit:
+            opts.emit(row)
     return report

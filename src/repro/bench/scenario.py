@@ -222,6 +222,24 @@ def _register_defaults() -> None:
                 workload={"iters": iters},
                 tags=("fig3", "paper"), section="fig3"))
 
+    # regime map: per kernel a sync baseline plus the kernel's best async
+    # strategy at each ring depth — `sweep` folds the measurements into
+    # per-cell "async pays / async hurts" verdict rows (bench.regime)
+    for kernel, shape in _SMOKE_SHAPES.items():
+        workload = dict(_SMOKE_WORKLOADS.get(kernel, {}))
+        register(Scenario(
+            name=f"regime/{kernel}/sync", kernel=kernel, shape=shape,
+            strategy=Strategy.SYNC, workload=dict(workload),
+            tags=("regime",), section="regime"))
+        strat = (Strategy.DROP_OFF if kernel == "pathfinder"
+                 else Strategy.OVERLAP)
+        for depth in (2, 3, 4):
+            register(Scenario(
+                name=f"regime/{kernel}/{strat.value}/d{depth}",
+                kernel=kernel, shape=shape, strategy=strat,
+                config={"depth": depth}, workload=dict(workload),
+                tags=("regime",), section="regime"))
+
     # paper Fig. 4: the four Rodinia kernels x every async strategy
     fig4 = {
         "hotspot": ((32, 126), {"iters": 2}),

@@ -1,12 +1,13 @@
 """Core: the paper's contribution (async data-movement pipelines) plus the
 machine-balance / roofline analysis machinery that the lineage study uses."""
 from . import async_pipeline, balance, config, hardware, roofline
-from .async_pipeline import Strategy
+from .async_pipeline import PipelineSpec, Strategy, parse_strategy
 from .config import (ArchConfig, AttnConfig, MoEConfig, RunConfig,
                      ShapeConfig, SSMConfig, SHAPES, get_shape)
 
 __all__ = [
     "async_pipeline", "balance", "config", "hardware", "roofline",
-    "Strategy", "ArchConfig", "AttnConfig", "MoEConfig", "RunConfig",
+    "PipelineSpec", "Strategy", "parse_strategy",
+    "ArchConfig", "AttnConfig", "MoEConfig", "RunConfig",
     "ShapeConfig", "SSMConfig", "SHAPES", "get_shape",
 ]

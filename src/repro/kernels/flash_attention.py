@@ -1,10 +1,11 @@
 """Flash attention (online softmax) with async K/V streaming — the paper's
 Overlap pattern applied to the transformer's dominant memory-bound kernel.
 
-The K/V tiles for query block i+depth-1 stream HBM -> VMEM while block i is in
-the MXU; causal/sliding-window masking prunes the KV loop to the tiles that
-can contribute (traced loop bounds).  GQA is handled by mapping each q head to
-its kv head inside the grid.
+The K/V tiles for query block i+A stream HBM -> VMEM while block i is in the
+MXU (A = the PipelineSpec's issue-ahead distance); causal/sliding-window
+masking prunes the KV loop to the tiles that can contribute (traced loop
+bounds).  GQA is handled by mapping each q head to its kv head inside the
+grid.
 
 Layout: q, k, v are (heads, seq, head_dim); batching is vmapped in ops.py.
 """
@@ -17,17 +18,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.async_pipeline import (Strategy, TileStream, emit, scratch_for,
-                                   dma_sems, compiler_params)
+from ..core.async_pipeline import (PipelineSpec, Strategy, TileStream,
+                                   as_spec, compiler_params, emit,
+                                   scratch_for)
 
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_hbm, k_hbm, v_hbm, o_hbm, q_buf, k_buf, v_buf, acc, m_i,
-                  l_i, q_sem, k_sems, v_sems, out_sem,
-                  *, strategy: Strategy, bq: int, bk: int, head_dim: int,
+def _flash_kernel(q_hbm, k_hbm, v_hbm, o_hbm, q_buf, k_buf, v_buf, k_stage,
+                  v_stage, acc, m_i, l_i, q_sem, k_sems, v_sems, out_sem,
+                  *, spec: PipelineSpec, bq: int, bk: int, head_dim: int,
                   q_heads_per_kv: int, causal: bool, window: int,
-                  scale: float, depth: int, n_kv_tiles_max: int):
+                  scale: float, n_kv_tiles_max: int):
     qh = pl.program_id(0)
     qi = pl.program_id(1)
     kvh = qh // q_heads_per_kv
@@ -53,11 +55,11 @@ def _flash_kernel(q_hbm, k_hbm, v_hbm, o_hbm, q_buf, k_buf, v_buf, acc, m_i,
     k_stream = TileStream(
         hbm=k_hbm, vmem=k_buf, sem=k_sems,
         index=lambda i: (kvh, pl.ds((lo + i) * bk, bk), slice(None)),
-        depth=depth)
+        depth=spec.ring_depth)
     v_stream = TileStream(
         hbm=v_hbm, vmem=v_buf, sem=v_sems,
         index=lambda i: (kvh, pl.ds((lo + i) * bk, bk), slice(None)),
-        depth=depth)
+        depth=spec.ring_depth)
 
     acc[...] = jnp.zeros_like(acc)
     m_i[...] = jnp.full_like(m_i, NEG_INF)
@@ -86,13 +88,13 @@ def _flash_kernel(q_hbm, k_hbm, v_hbm, o_hbm, q_buf, k_buf, v_buf, acc, m_i,
             preferred_element_type=jnp.float32)
         m_i[...] = m_new
 
-    if strategy == Strategy.DROP_OFF:
-        emit(strategy, [k_stream, v_stream], n_tiles,
-             lambda i, vals: online_softmax(i, vals[0], vals[1]), depth=depth)
+    if spec.strategy == Strategy.DROP_OFF:
+        emit(spec, [k_stream, v_stream], n_tiles,
+             lambda i, vals: online_softmax(i, vals[0], vals[1]))
     else:
-        emit(strategy, [k_stream, v_stream], n_tiles,
+        emit(spec, [k_stream, v_stream], n_tiles,
              lambda i, bufs: online_softmax(i, bufs[0][...], bufs[1][...]),
-             depth=depth)
+             staging=[k_stage, v_stage])
 
     out = (acc[...] / jnp.maximum(l_i[...], 1e-30)).astype(o_hbm.dtype)
     acc[...] = out
@@ -105,22 +107,23 @@ def _flash_kernel(q_hbm, k_hbm, v_hbm, o_hbm, q_buf, k_buf, v_buf, acc, m_i,
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: int = 0,
                            scale: float | None = None,
-                           strategy: Strategy = Strategy.OVERLAP,
-                           bq: int = 128, bk: int = 128, depth: int = 2,
+                           spec: PipelineSpec = PipelineSpec(),
+                           bq: int = 128, bk: int = 128,
                            interpret: bool = False) -> jax.Array:
     """q: (H, S, D), k/v: (KVH, S, D) -> (H, S, D) fp32."""
+    spec = as_spec(spec)
     h, s, d = q.shape
     kvh = k.shape[0]
     assert h % kvh == 0, (h, kvh)
     if s % bq or s % bk:
         raise ValueError(f"seq {s} must divide bq={bq}, bk={bk}")
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
-    k_buf, k_sems, dep = scratch_for(strategy, (bk, d), k.dtype, depth=depth)
-    v_buf, v_sems, _ = scratch_for(strategy, (bk, d), v.dtype, depth=depth)
+    k_buf, k_sems, k_stage = scratch_for(spec, (bk, d), k.dtype)
+    v_buf, v_sems, v_stage = scratch_for(spec, (bk, d), v.dtype)
     kernel = functools.partial(
-        _flash_kernel, strategy=strategy, bq=bq, bk=bk, head_dim=d,
+        _flash_kernel, spec=spec, bq=bq, bk=bk, head_dim=d,
         q_heads_per_kv=h // kvh, causal=causal, window=window, scale=scale,
-        depth=dep, n_kv_tiles_max=s // bk)
+        n_kv_tiles_max=s // bk)
     return pl.pallas_call(
         kernel,
         grid=(h, s // bq),
@@ -130,6 +133,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         scratch_shapes=[
             pltpu.VMEM((bq, d), q.dtype),
             k_buf, v_buf,
+            k_stage, v_stage,
             pltpu.VMEM((bq, d), jnp.float32),    # acc
             pltpu.VMEM((bq, 1), jnp.float32),    # running max
             pltpu.VMEM((bq, 1), jnp.float32),    # running denom

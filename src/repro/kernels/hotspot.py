@@ -4,7 +4,7 @@ One kernel call performs one simulation step over an (R, C) grid.  The host
 wrapper replicate-pads the temperature field to (R+2, C+2); the kernel streams
 row bands with a 2-row halo HBM -> VMEM under the selected async-copy strategy
 (the paper finds Overlap the winning pattern here, 1.12-1.23x on A100) and
-drains results through a double-buffered write-back.
+drains results through an N-deep write-back ring.
 """
 from __future__ import annotations
 
@@ -13,20 +13,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from ..core.async_pipeline import (Strategy, TileStream, WriteBack, emit,
-                                   scratch_for, ring_scratch, dma_sems,
-                                   compiler_params)
-
-OUT_DEPTH = 2
+from ..core.async_pipeline import (PipelineSpec, Strategy, TileStream,
+                                   WriteBack, as_spec, compiler_params, emit,
+                                   scratch_for, writeback_scratch)
 
 
 def _hotspot_kernel(tpad_hbm, power_hbm, o_hbm, t_buf, p_buf, out_buf,
                     t_stage, p_stage, t_sems, p_sems, out_sems,
-                    *, strategy: Strategy, n_tiles: int, tile_rows: int,
-                    cols: int, rx: float, ry: float, rz: float, cap: float,
-                    depth: int):
+                    *, spec: PipelineSpec, n_tiles: int, tile_rows: int,
+                    cols: int, rx: float, ry: float, rz: float, cap: float):
     pid = pl.program_id(0)
     base = pid * n_tiles * tile_rows
 
@@ -34,15 +30,15 @@ def _hotspot_kernel(tpad_hbm, power_hbm, o_hbm, t_buf, p_buf, out_buf,
         hbm=tpad_hbm, vmem=t_buf, sem=t_sems,
         index=lambda i: (pl.ds(base + i * tile_rows, tile_rows + 2),
                          slice(None)),
-        depth=depth)
+        depth=spec.ring_depth)
     p_stream = TileStream(
         hbm=power_hbm, vmem=p_buf, sem=p_sems,
         index=lambda i: (pl.ds(base + i * tile_rows, tile_rows), slice(None)),
-        depth=depth)
+        depth=spec.ring_depth)
     wb = WriteBack(
         hbm=o_hbm, vmem=out_buf, sem=out_sems,
         index=lambda i: (pl.ds(base + i * tile_rows, tile_rows), slice(None)),
-        depth=OUT_DEPTH)
+        depth=spec.out_depth)
 
     def stencil(tpad, power):
         # tpad: (tile_rows+2, cols+2) halo tile; power: (tile_rows, cols)
@@ -56,29 +52,28 @@ def _hotspot_kernel(tpad_hbm, power_hbm, o_hbm, t_buf, p_buf, out_buf,
                        + (80.0 - t) * rz)
         return t + delta
 
-    if strategy == Strategy.DROP_OFF:
+    if spec.strategy == Strategy.DROP_OFF:
         def compute_value(i, vals):
             wb.push(i, stencil(vals[0], vals[1]))
-        emit(strategy, [t_stream, p_stream], n_tiles, compute_value,
-             depth=depth)
+        emit(spec, [t_stream, p_stream], n_tiles, compute_value)
     else:
         def compute(i, bufs):
             wb.push(i, stencil(bufs[0][...], bufs[1][...]))
-        staging = [t_stage, p_stage] if strategy == Strategy.SYNC else None
-        emit(strategy, [t_stream, p_stream], n_tiles, compute, depth=depth,
-             staging=staging)
+        emit(spec, [t_stream, p_stream], n_tiles, compute,
+             staging=[t_stage, p_stage])
 
     wb.drain(n_tiles)
 
 
 def hotspot_step_pallas(temp: jax.Array, power: jax.Array, *,
-                        strategy: Strategy = Strategy.OVERLAP,
-                        tile_rows: int = 8, depth: int = 2,
+                        spec: PipelineSpec = PipelineSpec(),
+                        tile_rows: int = 8,
                         rx: float = 0.1, ry: float = 0.1, rz: float = 0.5,
                         cap: float = 0.5, grid: int = 1,
                         interpret: bool = False) -> jax.Array:
     """One hotspot iteration.  temp/power: (R, C); R divisible by
     grid*tile_rows."""
+    spec = as_spec(spec)
     rows, cols = temp.shape
     block = rows // grid
     if rows % (grid * tile_rows):
@@ -86,13 +81,13 @@ def hotspot_step_pallas(temp: jax.Array, power: jax.Array, *,
     n_tiles = block // tile_rows
     tpad = jnp.pad(temp, ((1, 1), (1, 1)), mode="edge")
 
-    t_buf, t_sems, d = scratch_for(strategy, (tile_rows + 2, cols + 2),
-                                   temp.dtype, depth=depth)
-    p_buf, p_sems, _ = scratch_for(strategy, (tile_rows, cols), power.dtype,
-                                   depth=depth)
+    t_buf, t_sems, t_stage = scratch_for(spec, (tile_rows + 2, cols + 2),
+                                         temp.dtype)
+    p_buf, p_sems, p_stage = scratch_for(spec, (tile_rows, cols), power.dtype)
+    out_buf, out_sems = writeback_scratch(spec, (tile_rows, cols), temp.dtype)
     kernel = functools.partial(
-        _hotspot_kernel, strategy=strategy, n_tiles=n_tiles,
-        tile_rows=tile_rows, cols=cols, rx=rx, ry=ry, rz=rz, cap=cap, depth=d)
+        _hotspot_kernel, spec=spec, n_tiles=n_tiles,
+        tile_rows=tile_rows, cols=cols, rx=rx, ry=ry, rz=rz, cap=cap)
     return pl.pallas_call(
         kernel,
         grid=(grid,),
@@ -101,11 +96,9 @@ def hotspot_step_pallas(temp: jax.Array, power: jax.Array, *,
                   pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         scratch_shapes=[
-            t_buf, p_buf,
-            ring_scratch(OUT_DEPTH, (tile_rows, cols), temp.dtype),
-            pltpu.VMEM((tile_rows + 2, cols + 2), temp.dtype),
-            pltpu.VMEM((tile_rows, cols), power.dtype),
-            t_sems, p_sems, dma_sems(OUT_DEPTH),
+            t_buf, p_buf, out_buf,
+            t_stage, p_stage,
+            t_sems, p_sems, out_sems,
         ],
         interpret=interpret,
         compiler_params=compiler_params(

@@ -20,11 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.async_pipeline import (Strategy, TileStream, WriteBack, emit,
-                                   scratch_for, ring_scratch, dma_sems,
-                                   compiler_params)
-
-OUT_DEPTH = 2
+from ..core.async_pipeline import (PipelineSpec, Strategy, TileStream,
+                                   WriteBack, as_spec, compiler_params, emit,
+                                   scratch_for, writeback_scratch)
 
 
 # --- diagonal block factorization ---------------------------------------------
@@ -115,22 +113,24 @@ def lud_perimeter_col(diag: jax.Array, strip: jax.Array, *, bh: int = 128,
 
 def _internal_kernel(l_hbm, u_hbm, c_hbm, o_hbm, l_buf, u_buf, c_buf, out_buf,
                      u_stage, c_stage, l_sem, u_sems, c_sems, out_sems,
-                     *, strategy: Strategy, n_tiles: int, bi: int, bs: int,
-                     bj: int, depth: int):
+                     *, spec: PipelineSpec, n_tiles: int, bi: int, bs: int,
+                     bj: int):
     ii = pl.program_id(0)
     lc = pltpu.make_async_copy(l_hbm.at[pl.ds(ii * bi, bi), :], l_buf, l_sem)
     lc.start()
 
     u_stream = TileStream(
         hbm=u_hbm, vmem=u_buf, sem=u_sems,
-        index=lambda j: (slice(None), pl.ds(j * bj, bj)), depth=depth)
+        index=lambda j: (slice(None), pl.ds(j * bj, bj)),
+        depth=spec.ring_depth)
     c_stream = TileStream(
         hbm=c_hbm, vmem=c_buf, sem=c_sems,
-        index=lambda j: (pl.ds(ii * bi, bi), pl.ds(j * bj, bj)), depth=depth)
+        index=lambda j: (pl.ds(ii * bi, bi), pl.ds(j * bj, bj)),
+        depth=spec.ring_depth)
     wb = WriteBack(
         hbm=o_hbm, vmem=out_buf, sem=out_sems,
         index=lambda j: (pl.ds(ii * bi, bi), pl.ds(j * bj, bj)),
-        depth=OUT_DEPTH)
+        depth=spec.out_depth)
     lc.wait()
     l_tile = l_buf[...]
 
@@ -138,32 +138,30 @@ def _internal_kernel(l_hbm, u_hbm, c_hbm, o_hbm, l_buf, u_buf, c_buf, out_buf,
         wb.push(j, c_tile - jnp.dot(l_tile, u_tile,
                                     preferred_element_type=c_tile.dtype))
 
-    if strategy == Strategy.DROP_OFF:
-        emit(strategy, [u_stream, c_stream], n_tiles,
-             lambda j, vals: update(j, vals[0], vals[1]), depth=depth)
+    if spec.strategy == Strategy.DROP_OFF:
+        emit(spec, [u_stream, c_stream], n_tiles,
+             lambda j, vals: update(j, vals[0], vals[1]))
     else:
         def compute(j, bufs):
             update(j, bufs[0][...], bufs[1][...])
-        staging = [u_stage, c_stage] if strategy == Strategy.SYNC else None
-        emit(strategy, [u_stream, c_stream], n_tiles, compute, depth=depth,
-             staging=staging)
+        emit(spec, [u_stream, c_stream], n_tiles, compute,
+             staging=[u_stage, c_stage])
     wb.drain(n_tiles)
 
 
 def lud_internal(l_strip: jax.Array, u_strip: jax.Array, c: jax.Array, *,
-                 strategy: Strategy = Strategy.OVERLAP, bi: int = 128,
-                 bj: int = 128, depth: int = 2,
-                 interpret: bool = False) -> jax.Array:
+                 spec: PipelineSpec = PipelineSpec(), bi: int = 128,
+                 bj: int = 128, interpret: bool = False) -> jax.Array:
     """C -= L @ U.  l_strip: (H, bs), u_strip: (bs, W), c: (H, W)."""
+    spec = as_spec(spec)
     (h, bs), (_, w) = l_strip.shape, u_strip.shape
     bi, bj = min(bi, h), min(bj, w)
     assert h % bi == 0 and w % bj == 0
-    u_buf, u_sems, d = scratch_for(strategy, (bs, bj), u_strip.dtype,
-                                   depth=depth)
-    c_buf, c_sems, _ = scratch_for(strategy, (bi, bj), c.dtype, depth=depth)
+    u_buf, u_sems, u_stage = scratch_for(spec, (bs, bj), u_strip.dtype)
+    c_buf, c_sems, c_stage = scratch_for(spec, (bi, bj), c.dtype)
+    out_buf, out_sems = writeback_scratch(spec, (bi, bj), c.dtype)
     kernel = functools.partial(
-        _internal_kernel, strategy=strategy, n_tiles=w // bj, bi=bi, bs=bs,
-        bj=bj, depth=d)
+        _internal_kernel, spec=spec, n_tiles=w // bj, bi=bi, bs=bs, bj=bj)
     return pl.pallas_call(
         kernel,
         grid=(h // bi,),
@@ -173,11 +171,11 @@ def lud_internal(l_strip: jax.Array, u_strip: jax.Array, c: jax.Array, *,
         scratch_shapes=[
             pltpu.VMEM((bi, bs), l_strip.dtype),
             u_buf, c_buf,
-            ring_scratch(OUT_DEPTH, (bi, bj), c.dtype),
-            pltpu.VMEM((bs, bj), u_strip.dtype),
-            pltpu.VMEM((bi, bj), c.dtype),
+            out_buf,
+            u_stage,
+            c_stage,
             pltpu.SemaphoreType.DMA,
-            u_sems, c_sems, dma_sems(OUT_DEPTH),
+            u_sems, c_sems, out_sems,
         ],
         interpret=interpret,
         compiler_params=compiler_params(
@@ -188,10 +186,11 @@ def lud_internal(l_strip: jax.Array, u_strip: jax.Array, c: jax.Array, *,
 # --- full blocked LUD ------------------------------------------------------------
 
 def lud_pallas(a: jax.Array, *, bs: int = 32,
-               strategy: Strategy = Strategy.OVERLAP, depth: int = 2,
+               spec: PipelineSpec = PipelineSpec(),
                interpret: bool = False) -> jax.Array:
     """Blocked LU of (n, n) with n % bs == 0.  Returns the combined LU matrix
     (matches ref.lud_ref)."""
+    spec = as_spec(spec)
     n = a.shape[0]
     if n % bs or bs > n:
         raise ValueError(f"n={n} not divisible by block size bs={bs}")
@@ -206,7 +205,6 @@ def lud_pallas(a: jax.Array, *, bs: int = 32,
         col = lud_perimeter_col(diag, a[hi:, lo:hi], interpret=interpret)
         a = a.at[lo:hi, hi:].set(row)
         a = a.at[hi:, lo:hi].set(col)
-        c = lud_internal(col, row, a[hi:, hi:], strategy=strategy,
-                         depth=depth, interpret=interpret)
+        c = lud_internal(col, row, a[hi:, hi:], spec=spec, interpret=interpret)
         a = a.at[hi:, hi:].set(c)
     return a

@@ -18,23 +18,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.async_pipeline import (Strategy, TileStream, emit, scratch_for,
-                                   dma_sems, compiler_params)
+from ..core.async_pipeline import (PipelineSpec, Strategy, TileStream,
+                                   as_spec, compiler_params, emit,
+                                   scratch_for)
 
 
 def _matmul_kernel(a_hbm, b_hbm, o_hbm, a_buf, b_buf, acc, a_stage, b_stage,
                    a_sems, b_sems, out_sem,
-                   *, strategy: Strategy, n_k: int, bm: int, bk: int, bn: int,
-                   depth: int):
+                   *, spec: PipelineSpec, n_k: int, bm: int, bk: int, bn: int):
     mi = pl.program_id(0)
     ni = pl.program_id(1)
 
     a_stream = TileStream(
         hbm=a_hbm, vmem=a_buf, sem=a_sems,
-        index=lambda k: (pl.ds(mi * bm, bm), pl.ds(k * bk, bk)), depth=depth)
+        index=lambda k: (pl.ds(mi * bm, bm), pl.ds(k * bk, bk)),
+        depth=spec.ring_depth)
     b_stream = TileStream(
         hbm=b_hbm, vmem=b_buf, sem=b_sems,
-        index=lambda k: (pl.ds(k * bk, bk), pl.ds(ni * bn, bn)), depth=depth)
+        index=lambda k: (pl.ds(k * bk, bk), pl.ds(ni * bn, bn)),
+        depth=spec.ring_depth)
 
     acc[...] = jnp.zeros_like(acc)
 
@@ -42,15 +44,14 @@ def _matmul_kernel(a_hbm, b_hbm, o_hbm, a_buf, b_buf, acc, a_stage, b_stage,
         acc[...] += jnp.dot(a_tile, b_tile,
                             preferred_element_type=jnp.float32)
 
-    if strategy == Strategy.DROP_OFF:
-        emit(strategy, [a_stream, b_stream], n_k,
-             lambda k, vals: mac(vals[0], vals[1]), depth=depth)
+    if spec.strategy == Strategy.DROP_OFF:
+        emit(spec, [a_stream, b_stream], n_k,
+             lambda k, vals: mac(vals[0], vals[1]))
     else:
         def compute(k, bufs):
             mac(bufs[0][...], bufs[1][...])
-        staging = [a_stage, b_stage] if strategy == Strategy.SYNC else None
-        emit(strategy, [a_stream, b_stream], n_k, compute, depth=depth,
-             staging=staging)
+        emit(spec, [a_stream, b_stream], n_k, compute,
+             staging=[a_stage, b_stage])
 
     # drain accumulator to HBM
     out = pltpu.make_async_copy(
@@ -60,20 +61,20 @@ def _matmul_kernel(a_hbm, b_hbm, o_hbm, a_buf, b_buf, acc, a_stage, b_stage,
 
 
 def matmul_pallas(a: jax.Array, b: jax.Array, *,
-                  strategy: Strategy = Strategy.OVERLAP,
-                  bm: int = 128, bk: int = 128, bn: int = 128, depth: int = 2,
+                  spec: PipelineSpec = PipelineSpec(),
+                  bm: int = 128, bk: int = 128, bn: int = 128,
                   interpret: bool = False) -> jax.Array:
     """a: (M, K), b: (K, N) -> fp32 (M, N).  Dims must divide block shapes."""
+    spec = as_spec(spec)
     (m, k), (k2, n) = a.shape, b.shape
     assert k == k2, (a.shape, b.shape)
     if m % bm or k % bk or n % bn:
         raise ValueError(f"shape {(m, k, n)} not divisible by blocks {(bm, bk, bn)}")
     n_k = k // bk
-    a_buf, a_sems, d = scratch_for(strategy, (bm, bk), a.dtype, depth=depth)
-    b_buf, b_sems, _ = scratch_for(strategy, (bk, bn), b.dtype, depth=depth)
+    a_buf, a_sems, a_stage = scratch_for(spec, (bm, bk), a.dtype)
+    b_buf, b_sems, b_stage = scratch_for(spec, (bk, bn), b.dtype)
     kernel = functools.partial(
-        _matmul_kernel, strategy=strategy, n_k=n_k, bm=bm, bk=bk, bn=bn,
-        depth=d)
+        _matmul_kernel, spec=spec, n_k=n_k, bm=bm, bk=bk, bn=bn)
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn),
@@ -84,8 +85,8 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *,
         scratch_shapes=[
             a_buf, b_buf,
             pltpu.VMEM((bm, bn), jnp.float32),   # accumulator
-            pltpu.VMEM((bm, bk), a.dtype),       # sync staging A
-            pltpu.VMEM((bk, bn), b.dtype),       # sync staging B
+            a_stage,
+            b_stage,
             a_sems, b_sems,
             pltpu.SemaphoreType.DMA,
         ],

@@ -23,11 +23,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.async_pipeline import (Strategy, TileStream, WriteBack, emit,
-                                   scratch_for, ring_scratch, dma_sems)
+from ..core.async_pipeline import (PipelineSpec, Strategy, TileStream,
+                                   WriteBack, as_spec, emit, scratch_for,
+                                   writeback_scratch)
 
 NEG = -1e30
-OUT_DEPTH = 2
 
 
 def _cummax(x):
@@ -44,8 +44,8 @@ def _cummax(x):
 
 def _nw_kernel(scores_hbm, o_hbm, state, row_buf, stage, sems, out_buf,
                out_sems, init_sem,
-               *, strategy: Strategy, n_tiles: int, tile_rows: int, n: int,
-               width: int, penalty: float, depth: int):
+               *, spec: PipelineSpec, n_tiles: int, tile_rows: int, n: int,
+               width: int, penalty: float):
     # state = DP row of length n+1 (padded to `width`); row 0 is -j*p
     j = jax.lax.broadcasted_iota(jnp.float32, (1, width), 1)
     valid = j <= n
@@ -54,11 +54,11 @@ def _nw_kernel(scores_hbm, o_hbm, state, row_buf, stage, sems, out_buf,
     stream = TileStream(
         hbm=scores_hbm, vmem=row_buf, sem=sems,
         index=lambda i: (pl.ds(i * tile_rows, tile_rows), slice(None)),
-        depth=depth)
+        depth=spec.ring_depth)
     wb = WriteBack(
         hbm=o_hbm, vmem=out_buf, sem=out_sems,
         index=lambda i: (pl.ds(i * tile_rows, tile_rows), slice(None)),
-        depth=OUT_DEPTH)
+        depth=spec.out_depth)
 
     def fold(i, tile):
         # tile: (tile_rows, width) score rows s[i-1, j-1] pre-aligned to j
@@ -76,25 +76,23 @@ def _nw_kernel(scores_hbm, o_hbm, state, row_buf, stage, sems, out_buf,
             rows.append(new)
         wb.push(i, jnp.concatenate(rows, axis=0))
 
-    if strategy == Strategy.DROP_OFF:
-        emit(strategy, [stream], n_tiles, lambda i, vals: fold(i, vals[0]),
-             depth=depth)
+    if spec.strategy == Strategy.DROP_OFF:
+        emit(spec, [stream], n_tiles, lambda i, vals: fold(i, vals[0]))
     else:
         def compute(i, bufs):
             fold(i, bufs[0][...])
-        staging = [stage] if strategy == Strategy.SYNC else None
-        emit(strategy, [stream], n_tiles, compute, depth=depth,
-             staging=staging)
+        emit(spec, [stream], n_tiles, compute, staging=[stage])
 
     wb.drain(n_tiles)
 
 
 def nw_pallas(seq_scores: jax.Array, penalty: int, *,
-              strategy: Strategy = Strategy.REGISTER_BYPASS,
-              tile_rows: int = 8, depth: int = 2,
+              spec: PipelineSpec = PipelineSpec(Strategy.REGISTER_BYPASS),
+              tile_rows: int = 8,
               interpret: bool = False) -> jax.Array:
     """seq_scores: (n, n) similarity matrix.  Returns the (n+1, n+1) DP table
     (float32), matching ref.nw_ref."""
+    spec = as_spec(spec)
     n = seq_scores.shape[0]
     if n % tile_rows:
         raise ValueError(f"n={n} must divide tile_rows={tile_rows}")
@@ -103,11 +101,12 @@ def nw_pallas(seq_scores: jax.Array, penalty: int, *,
     scores = jnp.pad(seq_scores.astype(jnp.float32),
                      ((0, 0), (1, width - n - 1)))
     n_tiles = n // tile_rows
-    row_buf, sems, d = scratch_for(strategy, (tile_rows, width),
-                                   jnp.float32, depth=depth)
+    row_buf, sems, stage = scratch_for(spec, (tile_rows, width), jnp.float32)
+    out_buf, out_sems = writeback_scratch(spec, (tile_rows, width),
+                                          jnp.float32)
     kernel = functools.partial(
-        _nw_kernel, strategy=strategy, n_tiles=n_tiles, tile_rows=tile_rows,
-        n=n, width=width, penalty=float(penalty), depth=d)
+        _nw_kernel, spec=spec, n_tiles=n_tiles, tile_rows=tile_rows,
+        n=n, width=width, penalty=float(penalty))
     table = pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((n, width), jnp.float32),
@@ -116,10 +115,10 @@ def nw_pallas(seq_scores: jax.Array, penalty: int, *,
         scratch_shapes=[
             pltpu.VMEM((1, width), jnp.float32),           # DP row state
             row_buf,
-            pltpu.VMEM((tile_rows, width), jnp.float32),   # sync staging
+            stage,
             sems,
-            ring_scratch(OUT_DEPTH, (tile_rows, width), jnp.float32),
-            dma_sems(OUT_DEPTH),
+            out_buf,
+            out_sems,
             pltpu.SemaphoreType.DMA,
         ],
         interpret=interpret,

@@ -1,10 +1,14 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 These are the entry points the framework / benchmarks / tests use.  Every
-wrapper accepts ``strategy`` (the paper's async-copy pattern), is jitted with
-the structural arguments static, and has a matching oracle in ``ref.py``.
-``interpret=True`` (default on this CPU container) runs the kernel bodies in
-Python via the Pallas interpreter; on a real TPU pass ``interpret=False``.
+wrapper accepts ``strategy`` (the paper's async-copy pattern) plus the
+pipeline-shape axes ``depth`` / ``wait_group`` (and ``out_depth`` for the
+kernels with a write-back ring), is jitted with the structural arguments
+static, and has a matching oracle in ``ref.py``.  The flat keywords are
+assembled into a ``core.async_pipeline.PipelineSpec`` inside the jitted
+implementation.  ``interpret=True`` (default on this CPU container) runs the
+kernel bodies in Python via the Pallas interpreter; on a real TPU pass
+``interpret=False``.
 
 Config constants are NOT hard-coded per call site: each kernel's tunable
 parameters live in ``KERNEL_DEFAULTS`` and any omitted (None) keyword falls
@@ -21,7 +25,7 @@ from typing import Any, Callable, Dict
 import jax
 import jax.numpy as jnp
 
-from ..core.async_pipeline import Strategy
+from ..core.async_pipeline import PipelineSpec, Strategy
 from . import flash_attention as _fa
 from . import hotspot as _hs
 from . import lud as _lud
@@ -41,18 +45,24 @@ __all__ = [
 
 #: The single source of per-kernel tunable constants (the seed's hard-coded
 #: values).  ``repro.tuning.apply_registry_defaults`` replaces entries with
-#: empirically-tuned winners.
+#: empirically-tuned winners.  ``wait_group=None`` means the deepest safe
+#: issue-ahead (depth - 1); ``out_depth`` is the write-back ring depth for
+#: the kernels that drain through a WriteBack.
 KERNEL_DEFAULTS: Dict[str, Dict[str, Any]] = {
     "stream": dict(strategy=Strategy.OVERLAP, tile_rows=8, n_tiles=4,
-                   depth=2),
-    "hotspot": dict(strategy=Strategy.OVERLAP, tile_rows=8, depth=2),
-    "pathfinder": dict(strategy=Strategy.DROP_OFF, tile_rows=8, depth=2),
-    "nw": dict(strategy=Strategy.REGISTER_BYPASS, tile_rows=8, depth=2),
-    "lud": dict(strategy=Strategy.OVERLAP, bs=32, depth=2),
+                   depth=2, wait_group=None, out_depth=2),
+    "hotspot": dict(strategy=Strategy.OVERLAP, tile_rows=8, depth=2,
+                    wait_group=None, out_depth=2),
+    "pathfinder": dict(strategy=Strategy.DROP_OFF, tile_rows=8, depth=2,
+                       wait_group=None),
+    "nw": dict(strategy=Strategy.REGISTER_BYPASS, tile_rows=8, depth=2,
+               wait_group=None, out_depth=2),
+    "lud": dict(strategy=Strategy.OVERLAP, bs=32, depth=2, wait_group=None,
+                out_depth=2),
     "matmul": dict(strategy=Strategy.OVERLAP, bm=128, bk=128, bn=128,
-                   depth=2),
+                   depth=2, wait_group=None),
     "flash_attention": dict(strategy=Strategy.OVERLAP, bq=128, bk=128,
-                            depth=2),
+                            depth=2, wait_group=None),
 }
 
 _SEED_DEFAULTS = {k: dict(v) for k, v in KERNEL_DEFAULTS.items()}
@@ -121,106 +131,127 @@ def _with_seed_fallback(kernel: str, given: Dict[str, Any],
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=(
-    "iters", "strategy", "tile_rows", "n_tiles", "depth", "interpret"))
-def _stream(x, *, iters, strategy, tile_rows, n_tiles, depth, interpret):
-    return _st.stream_pallas(x, iters=iters, strategy=strategy,
-                             tile_rows=tile_rows, n_tiles=n_tiles,
-                             depth=depth, interpret=interpret)
+    "iters", "strategy", "tile_rows", "n_tiles", "depth", "wait_group",
+    "out_depth", "interpret"))
+def _stream(x, *, iters, strategy, tile_rows, n_tiles, depth, wait_group,
+            out_depth, interpret):
+    spec = PipelineSpec(strategy=strategy, depth=depth,
+                        wait_group=wait_group, out_depth=out_depth)
+    return _st.stream_pallas(x, iters=iters, spec=spec, tile_rows=tile_rows,
+                             n_tiles=n_tiles, interpret=interpret)
 
 
 def stream(x, *, iters=1, strategy=None, tile_rows=None, n_tiles=None,
-           depth=None, interpret=True):
+           depth=None, wait_group=None, out_depth=None, interpret=True):
     return _with_seed_fallback(
         "stream", dict(strategy=strategy, tile_rows=tile_rows,
-                       n_tiles=n_tiles, depth=depth),
+                       n_tiles=n_tiles, depth=depth, wait_group=wait_group,
+                       out_depth=out_depth),
         lambda cfg: _stream(x, iters=iters, interpret=interpret, **cfg))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "iters", "strategy", "tile_rows", "depth", "grid", "interpret"))
-def _hotspot(temp, power, *, iters, strategy, tile_rows, depth, grid,
-             interpret):
-    return _hs.hotspot_pallas(temp, power, iters=iters, strategy=strategy,
-                              tile_rows=tile_rows, depth=depth, grid=grid,
+    "iters", "strategy", "tile_rows", "depth", "wait_group", "out_depth",
+    "grid", "interpret"))
+def _hotspot(temp, power, *, iters, strategy, tile_rows, depth, wait_group,
+             out_depth, grid, interpret):
+    spec = PipelineSpec(strategy=strategy, depth=depth,
+                        wait_group=wait_group, out_depth=out_depth)
+    return _hs.hotspot_pallas(temp, power, iters=iters, spec=spec,
+                              tile_rows=tile_rows, grid=grid,
                               interpret=interpret)
 
 
 def hotspot(temp, power, *, iters=1, strategy=None, tile_rows=None,
-            depth=None, grid=1, interpret=True):
+            depth=None, wait_group=None, out_depth=None, grid=1,
+            interpret=True):
     return _with_seed_fallback(
-        "hotspot", dict(strategy=strategy, tile_rows=tile_rows, depth=depth),
+        "hotspot", dict(strategy=strategy, tile_rows=tile_rows, depth=depth,
+                        wait_group=wait_group, out_depth=out_depth),
         lambda cfg: _hotspot(temp, power, iters=iters, grid=grid,
                              interpret=interpret, **cfg))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "strategy", "tile_rows", "depth", "interpret"))
-def _pathfinder(wall, *, strategy, tile_rows, depth, interpret):
-    return _pf.pathfinder_pallas(wall, strategy=strategy,
-                                 tile_rows=tile_rows, depth=depth,
+    "strategy", "tile_rows", "depth", "wait_group", "interpret"))
+def _pathfinder(wall, *, strategy, tile_rows, depth, wait_group, interpret):
+    spec = PipelineSpec(strategy=strategy, depth=depth,
+                        wait_group=wait_group)
+    return _pf.pathfinder_pallas(wall, spec=spec, tile_rows=tile_rows,
                                  interpret=interpret)
 
 
 def pathfinder(wall, *, strategy=None, tile_rows=None, depth=None,
-               interpret=True):
+               wait_group=None, interpret=True):
     return _with_seed_fallback(
         "pathfinder", dict(strategy=strategy, tile_rows=tile_rows,
-                           depth=depth),
+                           depth=depth, wait_group=wait_group),
         lambda cfg: _pathfinder(wall, interpret=interpret, **cfg))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "penalty", "strategy", "tile_rows", "depth", "interpret"))
-def _nw_jit(seq_scores, *, penalty, strategy, tile_rows, depth, interpret):
-    return _nw.nw_pallas(seq_scores, penalty, strategy=strategy,
-                         tile_rows=tile_rows, depth=depth,
-                         interpret=interpret)
+    "penalty", "strategy", "tile_rows", "depth", "wait_group", "out_depth",
+    "interpret"))
+def _nw_jit(seq_scores, *, penalty, strategy, tile_rows, depth, wait_group,
+            out_depth, interpret):
+    spec = PipelineSpec(strategy=strategy, depth=depth,
+                        wait_group=wait_group, out_depth=out_depth)
+    return _nw.nw_pallas(seq_scores, penalty, spec=spec,
+                         tile_rows=tile_rows, interpret=interpret)
 
 
 def nw(seq_scores, *, penalty=10, strategy=None, tile_rows=None, depth=None,
-       interpret=True):
+       wait_group=None, out_depth=None, interpret=True):
     return _with_seed_fallback(
-        "nw", dict(strategy=strategy, tile_rows=tile_rows, depth=depth),
+        "nw", dict(strategy=strategy, tile_rows=tile_rows, depth=depth,
+                   wait_group=wait_group, out_depth=out_depth),
         lambda cfg: _nw_jit(seq_scores, penalty=penalty,
                             interpret=interpret, **cfg))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "bs", "strategy", "depth", "interpret"))
-def _lud_jit(a, *, bs, strategy, depth, interpret):
-    return _lud.lud_pallas(a, bs=bs, strategy=strategy, depth=depth,
-                           interpret=interpret)
+    "bs", "strategy", "depth", "wait_group", "out_depth", "interpret"))
+def _lud_jit(a, *, bs, strategy, depth, wait_group, out_depth, interpret):
+    spec = PipelineSpec(strategy=strategy, depth=depth,
+                        wait_group=wait_group, out_depth=out_depth)
+    return _lud.lud_pallas(a, bs=bs, spec=spec, interpret=interpret)
 
 
-def lud(a, *, bs=None, strategy=None, depth=None, interpret=True):
+def lud(a, *, bs=None, strategy=None, depth=None, wait_group=None,
+        out_depth=None, interpret=True):
     return _with_seed_fallback(
-        "lud", dict(bs=bs, strategy=strategy, depth=depth),
+        "lud", dict(bs=bs, strategy=strategy, depth=depth,
+                    wait_group=wait_group, out_depth=out_depth),
         lambda cfg: _lud_jit(a, interpret=interpret, **cfg))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "strategy", "bm", "bk", "bn", "depth", "interpret"))
-def _matmul(a, b, *, strategy, bm, bk, bn, depth, interpret):
-    return _mm.matmul_pallas(a, b, strategy=strategy, bm=bm, bk=bk, bn=bn,
-                             depth=depth, interpret=interpret)
+    "strategy", "bm", "bk", "bn", "depth", "wait_group", "interpret"))
+def _matmul(a, b, *, strategy, bm, bk, bn, depth, wait_group, interpret):
+    spec = PipelineSpec(strategy=strategy, depth=depth,
+                        wait_group=wait_group)
+    return _mm.matmul_pallas(a, b, spec=spec, bm=bm, bk=bk, bn=bn,
+                             interpret=interpret)
 
 
 def matmul(a, b, *, strategy=None, bm=None, bk=None, bn=None, depth=None,
-           interpret=True):
+           wait_group=None, interpret=True):
     return _with_seed_fallback(
-        "matmul", dict(strategy=strategy, bm=bm, bk=bk, bn=bn, depth=depth),
+        "matmul", dict(strategy=strategy, bm=bm, bk=bk, bn=bn, depth=depth,
+                       wait_group=wait_group),
         lambda cfg: _matmul(a, b, interpret=interpret, **cfg))
 
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "scale", "strategy", "bq", "bk", "depth",
-    "interpret"))
+    "wait_group", "interpret"))
 def _flash_jit(q, k, v, *, causal, window, scale, strategy, bq, bk, depth,
-               interpret):
+               wait_group, interpret):
+    spec = PipelineSpec(strategy=strategy, depth=depth,
+                        wait_group=wait_group)
     fn = functools.partial(
         _fa.flash_attention_pallas, causal=causal, window=window,
-        scale=scale, strategy=strategy, bq=bq, bk=bk, depth=depth,
-        interpret=interpret)
+        scale=scale, spec=spec, bq=bq, bk=bk, interpret=interpret)
     for _ in range(q.ndim - 3):
         fn = jax.vmap(fn)
     return fn(q, k, v)
@@ -228,10 +259,10 @@ def _flash_jit(q, k, v, *, causal, window, scale, strategy, bq, bk, depth,
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
                     strategy=None, bq=None, bk=None, depth=None,
-                    interpret=True):
+                    wait_group=None, interpret=True):
     """q: (..., H, S, D), k/v: (..., KVH, S, D); leading dims are vmapped."""
     return _with_seed_fallback(
         "flash_attention", dict(strategy=strategy, bq=bq, bk=bk,
-                                depth=depth),
+                                depth=depth, wait_group=wait_group),
         lambda cfg: _flash_jit(q, k, v, causal=causal, window=window,
                                scale=scale, interpret=interpret, **cfg))

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.async_pipeline import (Strategy, TileStream, emit, scratch_for,
-                                   dma_sems)
+from ..core.async_pipeline import (PipelineSpec, Strategy, TileStream,
+                                   as_spec, emit, scratch_for)
 
 
 def _min3(prev):
@@ -27,8 +27,7 @@ def _min3(prev):
 
 
 def _pathfinder_kernel(wall_hbm, o_hbm, state, row_buf, stage, sems, out_sem,
-                       *, strategy: Strategy, n_tiles: int, tile_rows: int,
-                       depth: int):
+                       *, spec: PipelineSpec, n_tiles: int, tile_rows: int):
     # row 0 initialises the DP state
     init = pltpu.make_async_copy(wall_hbm.at[pl.ds(0, 1), :], state, out_sem)
     init.start()
@@ -37,41 +36,38 @@ def _pathfinder_kernel(wall_hbm, o_hbm, state, row_buf, stage, sems, out_sem,
     stream = TileStream(
         hbm=wall_hbm, vmem=row_buf, sem=sems,
         index=lambda i: (pl.ds(1 + i * tile_rows, tile_rows), slice(None)),
-        depth=depth)
+        depth=spec.ring_depth)
 
     def fold(tile):
         for r in range(tile_rows):          # static unroll; carried dependency
             state[...] = tile[r:r + 1, :] + _min3(state[...])
 
-    if strategy == Strategy.DROP_OFF:
-        emit(strategy, [stream], n_tiles, lambda i, vals: fold(vals[0]),
-             depth=depth)
+    if spec.strategy == Strategy.DROP_OFF:
+        emit(spec, [stream], n_tiles, lambda i, vals: fold(vals[0]))
     else:
         def compute(i, bufs):
             fold(bufs[0][...])
-        staging = [stage] if strategy == Strategy.SYNC else None
-        emit(strategy, [stream], n_tiles, compute, depth=depth,
-             staging=staging)
+        emit(spec, [stream], n_tiles, compute, staging=[stage])
 
     out = pltpu.make_async_copy(state, o_hbm, out_sem)
     out.start()
     out.wait()
 
 
-def pathfinder_pallas(wall: jax.Array, *, strategy: Strategy = Strategy.DROP_OFF,
-                      tile_rows: int = 8, depth: int = 2,
+def pathfinder_pallas(wall: jax.Array, *,
+                      spec: PipelineSpec = PipelineSpec(Strategy.DROP_OFF),
+                      tile_rows: int = 8,
                       interpret: bool = False) -> jax.Array:
     """wall: (rows, cols); rows-1 must divide by tile_rows.  Returns (1, cols)
     final DP row."""
+    spec = as_spec(spec)
     rows, cols = wall.shape
     if (rows - 1) % tile_rows:
         raise ValueError(f"rows-1={rows-1} must divide tile_rows={tile_rows}")
     n_tiles = (rows - 1) // tile_rows
-    row_buf, sems, d = scratch_for(strategy, (tile_rows, cols), wall.dtype,
-                                   depth=depth)
+    row_buf, sems, stage = scratch_for(spec, (tile_rows, cols), wall.dtype)
     kernel = functools.partial(
-        _pathfinder_kernel, strategy=strategy, n_tiles=n_tiles,
-        tile_rows=tile_rows, depth=d)
+        _pathfinder_kernel, spec=spec, n_tiles=n_tiles, tile_rows=tile_rows)
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((1, cols), wall.dtype),
@@ -80,7 +76,7 @@ def pathfinder_pallas(wall: jax.Array, *, strategy: Strategy = Strategy.DROP_OFF
         scratch_shapes=[
             pltpu.VMEM((1, cols), wall.dtype),          # DP state
             row_buf,
-            pltpu.VMEM((tile_rows, cols), wall.dtype),  # sync staging
+            stage,
             sems,
             pltpu.SemaphoreType.DMA,
         ],

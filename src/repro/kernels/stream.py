@@ -3,10 +3,12 @@
 Element-wise application of f(x) = 0.5*x + 0.5 for a configurable number of
 iterations (= configurable arithmetic intensity), streaming tiles
 HBM -> VMEM under one of the four asynchronous-copy strategies and streaming
-results VMEM -> HBM through a double-buffered write-back DMA.
+results VMEM -> HBM through an N-deep write-back ring.
 
 Grid: one program per row-block; each program streams ``n_tiles`` tiles of
-``tile_rows`` x ``width`` elements from its slice of the input.
+``tile_rows`` x ``width`` elements from its slice of the input.  The
+pipeline shape (ring depth, wait-group, out-ring depth) comes from a
+``PipelineSpec``.
 """
 from __future__ import annotations
 
@@ -16,13 +18,10 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from ..core.async_pipeline import (Strategy, TileStream, WriteBack, emit,
-                                   scratch_for, ring_scratch, dma_sems,
-                                   compiler_params)
-
-OUT_DEPTH = 2
+from ..core.async_pipeline import (PipelineSpec, Strategy, TileStream,
+                                   WriteBack, as_spec, compiler_params, emit,
+                                   scratch_for, writeback_scratch)
 
 
 def _apply_f(val, iters: int):
@@ -33,63 +32,57 @@ def _apply_f(val, iters: int):
 
 
 def _stream_kernel(x_hbm, o_hbm, in_buf, out_buf, stage_buf, in_sems, out_sems,
-                   *, strategy: Strategy, n_tiles: int, tile_rows: int,
-                   iters: int, depth: int):
+                   *, spec: PipelineSpec, n_tiles: int, tile_rows: int,
+                   iters: int):
     pid = pl.program_id(0)
     base = pid * n_tiles * tile_rows
 
     stream = TileStream(
         hbm=x_hbm, vmem=in_buf, sem=in_sems,
         index=lambda i: (pl.ds(base + i * tile_rows, tile_rows), slice(None)),
-        depth=depth)
+        depth=spec.ring_depth)
 
     wb = WriteBack(
         hbm=o_hbm, vmem=out_buf, sem=out_sems,
         index=lambda i: (pl.ds(base + i * tile_rows, tile_rows), slice(None)),
-        depth=OUT_DEPTH)
+        depth=spec.out_depth)
 
-    if strategy == Strategy.DROP_OFF:
+    if spec.strategy == Strategy.DROP_OFF:
         def compute_value(i, vals):
             wb.push(i, _apply_f(vals[0], iters))
-        emit(strategy, [stream], n_tiles, compute_value, depth=depth)
+        emit(spec, [stream], n_tiles, compute_value)
     else:
         def compute(i, bufs):
             wb.push(i, _apply_f(bufs[0][...], iters))
-        staging = [stage_buf] if strategy == Strategy.SYNC else None
-        emit(strategy, [stream], n_tiles, compute, depth=depth, staging=staging)
+        emit(spec, [stream], n_tiles, compute, staging=[stage_buf])
 
     wb.drain(n_tiles)
 
 
 def stream_pallas(x: jax.Array, *, iters: int = 1,
-                  strategy: Strategy = Strategy.OVERLAP,
-                  tile_rows: int = 8, n_tiles: int = 4, depth: int = 2,
+                  spec: PipelineSpec = PipelineSpec(),
+                  tile_rows: int = 8, n_tiles: int = 4,
                   interpret: bool = False) -> jax.Array:
     """Run the microbenchmark kernel.  x: (rows, width); rows must equal
     g * n_tiles * tile_rows for an integer grid g."""
+    spec = as_spec(spec)
     rows, width = x.shape
     block = n_tiles * tile_rows
     if rows % block:
         raise ValueError(f"rows={rows} not divisible by n_tiles*tile_rows={block}")
     grid = rows // block
-    in_buf, in_sems, d = scratch_for(strategy, (tile_rows, width), x.dtype,
-                                     depth=depth)
+    in_buf, in_sems, stage = scratch_for(spec, (tile_rows, width), x.dtype)
+    out_buf, out_sems = writeback_scratch(spec, (tile_rows, width), x.dtype)
     kernel = functools.partial(
-        _stream_kernel, strategy=strategy, n_tiles=n_tiles,
-        tile_rows=tile_rows, iters=iters, depth=d)
+        _stream_kernel, spec=spec, n_tiles=n_tiles,
+        tile_rows=tile_rows, iters=iters)
     return pl.pallas_call(
         kernel,
         grid=(grid,),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        scratch_shapes=[
-            in_buf,
-            ring_scratch(OUT_DEPTH, (tile_rows, width), x.dtype),  # out ring
-            pltpu.VMEM((tile_rows, width), x.dtype),               # sync staging
-            in_sems,
-            dma_sems(OUT_DEPTH),
-        ],
+        scratch_shapes=[in_buf, out_buf, stage, in_sems, out_sems],
         interpret=interpret,
         compiler_params=compiler_params(
             dimension_semantics=("arbitrary",)),

@@ -17,7 +17,8 @@ CLI:  PYTHONPATH=src python -m repro.tuning.cli tune --kernel stream
 from .registry import (Measurement, Registry, SchemaMismatch, TuningRecord,
                        SCHEMA_VERSION, default_registry_path, make_key)
 from .search_space import (Candidate, KernelSpec, SearchSpace, TuningTask,
-                           KERNELS, SPECS, default_task, predict_time)
+                           KERNELS, SPECS, default_task, issue_ahead,
+                           predict_time, strategy_depth_waits)
 from .autotuner import (Autotuner, TimingStats, apply_registry_defaults,
                         apply_tuned_kernel_defaults, decode_config,
                         time_callable, tune_kernel, tuned)
@@ -27,6 +28,6 @@ __all__ = [
     "Registry", "SCHEMA_VERSION", "SchemaMismatch", "SearchSpace", "SPECS",
     "TimingStats", "TuningRecord", "TuningTask", "apply_registry_defaults",
     "apply_tuned_kernel_defaults", "decode_config", "default_registry_path",
-    "default_task", "make_key", "predict_time", "time_callable",
-    "tune_kernel", "tuned",
+    "default_task", "issue_ahead", "make_key", "predict_time",
+    "strategy_depth_waits", "time_callable", "tune_kernel", "tuned",
 ]

@@ -17,7 +17,7 @@ import jax
 
 from ..bench.timing import TimingStats, time_callable   # noqa: F401  (re-export)
 from ..core import hardware
-from ..core.async_pipeline import Strategy
+from ..core.async_pipeline import Strategy, parse_strategy
 from ..kernels import ops
 from .registry import Measurement, Registry, TuningRecord
 from .search_space import Candidate, TuningTask, default_task
@@ -123,7 +123,7 @@ def _encode(config: Dict[str, Any]) -> Dict[str, Any]:
 def decode_config(config: Dict[str, Any]) -> Dict[str, Any]:
     out = dict(config)
     if isinstance(out.get("strategy"), str):
-        out["strategy"] = Strategy(out["strategy"])
+        out["strategy"] = parse_strategy(out["strategy"])
     return out
 
 

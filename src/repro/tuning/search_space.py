@@ -33,16 +33,37 @@ DEFAULT_KEEP_RATIO = 2.0
 #: per-tile DMA issue overhead used by the strategy model (seconds)
 ISSUE_S = 1e-6
 
+#: DMA latency (seconds) before a copy's first byte lands — the 2208.11174
+#: Ampere-microbenchmark-style constant the pipeline model amortises against.
+#: With issue-ahead A, sustained DMA bandwidth is capped by Little's law at
+#: A * t_tile / (latency + t_tile) of peak: a deeper wait group keeps more
+#: copies in flight and recovers bandwidth, at the cost of a longer fill.
+DMA_LATENCY_S = 2e-6
+
+
+def issue_ahead(depth: int, wait_group: Optional[int]) -> int:
+    """Issue-ahead distance A for a (depth, wait_group) pipeline shape:
+    at most A copies are in flight while tile i computes."""
+    d = max(depth, 2)
+    return d - 1 if wait_group is None else max(0, min(wait_group, d - 1))
+
 
 def predict_time(strategy: Strategy, flops: float, nbytes: float, *,
                  depth: int, n_tiles: int,
+                 wait_group: Optional[int] = None,
                  chip: Optional[hardware.Chip] = None) -> float:
     """Analytic execution-time model (seconds) for one strategy.
 
     sync:            t_m * 1.5 + t_c   (staging re-pass through VMEM)
     register_bypass: t_m + t_c         (no overlap, no staging)
-    overlap:         max(t_m, t_c) + ring fill
-    drop_off:        max(t_m, t_c) + chunk fill + chunked issue overhead
+    overlap:         max(t_m / bw_frac, t_c) + ring fill, where
+                     bw_frac = min(1, A*t_tile / (latency + t_tile)) is the
+                     Little's-law bandwidth fraction an issue-ahead of A
+                     copies sustains — this is what makes depth an interior
+                     optimum: deeper rings recover bandwidth until bw_frac
+                     saturates at 1, after which the longer fill only hurts
+    drop_off:        same pipeline law at chunk granularity (tile/4), plus
+                     chunked issue overhead
     """
     chip = chip or hardware.TARGET
     t_c = flops / (chip.tflops_f32 * 1e12)
@@ -53,12 +74,20 @@ def predict_time(strategy: Strategy, flops: float, nbytes: float, *,
         return t_m * 1.5 + t_c + issue
     if strategy == Strategy.REGISTER_BYPASS:
         return t_m + t_c + issue
+    ahead = issue_ahead(depth, wait_group)
+    t_tile = t_m / n_tiles
     if strategy == Strategy.OVERLAP:
-        fill = (t_m / n_tiles) * (max(depth, 2) - 1)
-        return max(t_m, t_c) + fill + issue
-    # DROP_OFF: chunk-granularity fill, more per-chunk issue overhead
-    fill = (t_m / n_tiles) / 4
-    return max(t_m, t_c) + fill + 4 * issue
+        if ahead == 0:          # degenerate wait_group=0: no overlap at all
+            return t_m + t_c + issue
+        bw_frac = min(1.0, ahead * t_tile / (DMA_LATENCY_S + t_tile))
+        fill = ahead * t_tile + DMA_LATENCY_S
+        return max(t_m / bw_frac, t_c) + fill + issue
+    # DROP_OFF: chunk-granularity pipeline, more per-chunk issue overhead
+    t_chunk = t_tile / 4
+    a_eff = max(ahead, 1)
+    bw_frac = min(1.0, a_eff * t_chunk / (DMA_LATENCY_S + t_chunk))
+    fill = t_chunk + DMA_LATENCY_S
+    return max(t_m / bw_frac, t_c) + fill + 4 * issue
 
 
 @dataclass
@@ -81,7 +110,7 @@ class Candidate:
 # ---------------------------------------------------------------------------
 
 STRATEGIES: Tuple[Strategy, ...] = tuple(Strategy)
-DEPTHS: Tuple[int, ...] = (2, 4)
+DEPTHS: Tuple[int, ...] = (2, 3, 4)
 
 
 def strategy_depths(strategy: Strategy) -> Tuple[int, ...]:
@@ -93,8 +122,28 @@ def strategy_depths(strategy: Strategy) -> Tuple[int, ...]:
     return DEPTHS
 
 
+def strategy_depth_waits(strategy: Strategy
+                         ) -> Tuple[Tuple[int, Optional[int]], ...]:
+    """(depth, wait_group) pipeline shapes worth searching per strategy.
+
+    ``wait_group=None`` is the deepest safe issue-ahead (depth - 1).  At
+    depth 2 that is the only distinct shape (wait_group 1 == None); deeper
+    rings add a shallow-wait variant (wait for tile i with only 1 copy in
+    flight) — the ``cp.async.wait_group N`` axis where buffering and
+    synchronisation depth decouple."""
+    if strategy in (Strategy.SYNC, Strategy.REGISTER_BYPASS):
+        return ((2, None),)
+    out = []
+    for d in strategy_depths(strategy):
+        out.append((d, None))
+        if d > 2:
+            out.append((d, 1))
+    return tuple(out)
+
+
 def _strategy_depth_pairs():
-    return [(s, d) for s in STRATEGIES for d in strategy_depths(s)]
+    return [(s, d, w) for s in STRATEGIES
+            for d, w in strategy_depth_waits(s)]
 
 
 def _dtype_bytes(dtype) -> int:
@@ -127,11 +176,12 @@ STREAM_ITERS = 4          # fixed workload intensity for tuning runs
 def _stream_configs(shape):
     rows, _ = shape
     out = []
-    for (s, depth), tr, nt in itertools.product(
+    for (s, depth, wg), tr, nt in itertools.product(
             _strategy_depth_pairs(), (8, 16, 32), (2, 4, 8)):
         if rows % (tr * nt):
             continue
-        out.append(dict(strategy=s, depth=depth, tile_rows=tr, n_tiles=nt))
+        out.append(dict(strategy=s, depth=depth, wait_group=wg,
+                        out_depth=2, tile_rows=tr, n_tiles=nt))
     return out
 
 
@@ -142,7 +192,8 @@ def _stream_vmem(shape, dtype, cfg):
     d = 1 if cfg["strategy"] in (Strategy.SYNC, Strategy.REGISTER_BYPASS) \
         else cfg["depth"]
     stage = tile if cfg["strategy"] == Strategy.SYNC else 0
-    return d * tile + 2 * tile + stage          # in ring + out ring + staging
+    out_d = cfg.get("out_depth", 2)
+    return d * tile + out_d * tile + stage      # in ring + out ring + staging
 
 
 STREAM = KernelSpec(
@@ -164,11 +215,12 @@ STREAM = KernelSpec(
 def _matmul_configs(shape):
     m, k, n = shape
     out = []
-    for (s, depth), bm, bk, bn in itertools.product(
+    for (s, depth, wg), bm, bk, bn in itertools.product(
             _strategy_depth_pairs(), (128, 256), (128, 256), (128, 256)):
         if m % bm or k % bk or n % bn:
             continue
-        out.append(dict(strategy=s, depth=depth, bm=bm, bk=bk, bn=bn))
+        out.append(dict(strategy=s, depth=depth, wait_group=wg,
+                        bm=bm, bk=bk, bn=bn))
     return out
 
 
@@ -204,11 +256,12 @@ MATMUL = KernelSpec(
 def _hotspot_configs(shape):
     rows, _ = shape
     out = []
-    for (s, depth), tr in itertools.product(_strategy_depth_pairs(),
-                                             (8, 16, 32)):
+    for (s, depth, wg), tr in itertools.product(_strategy_depth_pairs(),
+                                                (8, 16, 32)):
         if rows % tr:
             continue
-        out.append(dict(strategy=s, depth=depth, tile_rows=tr))
+        out.append(dict(strategy=s, depth=depth, wait_group=wg,
+                        out_depth=2, tile_rows=tr))
     return out
 
 
@@ -220,7 +273,7 @@ def _hotspot_vmem(shape, dtype, cfg):
     d = 1 if cfg["strategy"] in (Strategy.SYNC, Strategy.REGISTER_BYPASS) \
         else cfg["depth"]
     stage = (t_tile + p_tile) if cfg["strategy"] == Strategy.SYNC else 0
-    return d * (t_tile + p_tile) + 2 * p_tile + stage
+    return d * (t_tile + p_tile) + cfg.get("out_depth", 2) * p_tile + stage
 
 
 HOTSPOT = KernelSpec(
@@ -244,11 +297,12 @@ HOTSPOT = KernelSpec(
 def _lud_configs(shape):
     n = shape[0]
     out = []
-    for (s, depth), bs in itertools.product(_strategy_depth_pairs(),
-                                             (16, 32, 64)):
+    for (s, depth, wg), bs in itertools.product(_strategy_depth_pairs(),
+                                                (16, 32, 64)):
         if n % bs or bs >= n:
             continue
-        out.append(dict(strategy=s, depth=depth, bs=bs))
+        out.append(dict(strategy=s, depth=depth, wait_group=wg,
+                        out_depth=2, bs=bs))
     return out
 
 
@@ -267,7 +321,7 @@ LUD = KernelSpec(
     vmem_bytes=lambda shape, dtype, cfg: (
         (2 + (1 if cfg["strategy"] in (Strategy.SYNC,
                                        Strategy.REGISTER_BYPASS)
-          else cfg["depth"]) * 2 + 2 + 2)
+          else cfg["depth"]) * 2 + cfg.get("out_depth", 2) + 2)
         * 128 * cfg["bs"] * _dtype_bytes(dtype)),
 )
 
@@ -277,11 +331,12 @@ LUD = KernelSpec(
 def _nw_configs(shape):
     n = shape[0]
     out = []
-    for (s, depth), tr in itertools.product(_strategy_depth_pairs(),
-                                             (4, 8, 16)):
+    for (s, depth, wg), tr in itertools.product(_strategy_depth_pairs(),
+                                                (4, 8, 16)):
         if n % tr:
             continue
-        out.append(dict(strategy=s, depth=depth, tile_rows=tr))
+        out.append(dict(strategy=s, depth=depth, wait_group=wg,
+                        out_depth=2, tile_rows=tr))
     return out
 
 
@@ -304,7 +359,7 @@ NW = KernelSpec(
     n_tiles=lambda shape, cfg: max(shape[0] // cfg["tile_rows"], 1),
     vmem_bytes=lambda shape, dtype, cfg: (
         ((1 if cfg["strategy"] in (Strategy.SYNC, Strategy.REGISTER_BYPASS)
-          else cfg["depth"]) + 3 +
+          else cfg["depth"]) + 1 + cfg.get("out_depth", 2) +
          (1 if cfg["strategy"] == Strategy.SYNC else 0))
         * cfg["tile_rows"] * _nw_width(shape[0]) * 4),
 )
@@ -315,11 +370,12 @@ NW = KernelSpec(
 def _pathfinder_configs(shape):
     rows, _ = shape
     out = []
-    for (s, depth), tr in itertools.product(_strategy_depth_pairs(),
-                                             (4, 8, 16)):
+    for (s, depth, wg), tr in itertools.product(_strategy_depth_pairs(),
+                                                (4, 8, 16)):
         if (rows - 1) % tr:
             continue
-        out.append(dict(strategy=s, depth=depth, tile_rows=tr))
+        out.append(dict(strategy=s, depth=depth, wait_group=wg,
+                        tile_rows=tr))
     return out
 
 
@@ -347,11 +403,12 @@ PATHFINDER = KernelSpec(
 def _flash_configs(shape):
     _, s_len, _ = shape
     out = []
-    for (s, depth), bq, bk in itertools.product(
+    for (s, depth, wg), bq, bk in itertools.product(
             _strategy_depth_pairs(), (128, 256), (128, 256)):
         if s_len % bq or s_len % bk:
             continue
-        out.append(dict(strategy=s, depth=depth, bq=bq, bk=bk))
+        out.append(dict(strategy=s, depth=depth, wait_group=wg,
+                        bq=bq, bk=bk))
     return out
 
 
@@ -421,6 +478,7 @@ class SearchSpace:
         t = predict_time(config["strategy"], flops, nbytes,
                          depth=config["depth"],
                          n_tiles=self.spec.n_tiles(self.shape, config),
+                         wait_group=config.get("wait_group"),
                          chip=self.chip)
         vmem = int(self.spec.vmem_bytes(self.shape, self.dtype, config))
         return Candidate(config=dict(config), predicted_us=t * 1e6,
@@ -432,14 +490,29 @@ class SearchSpace:
 
     def pruned(self, keep_ratio: float = DEFAULT_KEEP_RATIO
                ) -> Tuple[List[Candidate], List[Candidate]]:
-        """(survivors, dropped).  Drops VMEM-infeasible candidates and those
-        analytically dominated by more than ``keep_ratio``."""
+        """(survivors, dropped).  Drops VMEM-infeasible candidates, pipeline
+        shapes past analytic break-even (issue-ahead covering the whole tile
+        stream — the ring fill then costs the entire memory time up front,
+        so the async pipeline provably cannot beat the synchronous bound),
+        and candidates analytically dominated by more than ``keep_ratio``."""
         cands = self.candidates()
         for c in cands:
             if c.vmem_bytes > self.vmem_limit:
                 c.feasible = False
                 c.why_pruned = (f"vmem {c.vmem_bytes} > "
                                 f"limit {self.vmem_limit}")
+        for c in cands:
+            if not c.feasible:
+                continue
+            if c.config["strategy"] in (Strategy.OVERLAP, Strategy.DROP_OFF):
+                ahead = issue_ahead(c.config["depth"],
+                                    c.config.get("wait_group"))
+                n = max(self.spec.n_tiles(self.shape, c.config), 1)
+                if ahead >= n:
+                    c.feasible = False
+                    c.why_pruned = (
+                        f"break-even: issue-ahead {ahead} >= n_tiles {n}; "
+                        "ring fill spans the whole stream, cannot beat sync")
         feasible = [c for c in cands if c.feasible]
         if feasible:
             best = min(c.predicted_us for c in feasible)

@@ -1,0 +1,207 @@
+"""Loop-emitter edge regimes (interpret mode): every strategy through a
+minimal streaming kernel at ring depths beyond double-buffering, degenerate
+tile counts (``n_tiles < depth``, ``n_tiles == 0``), traced ``n_tiles``, and
+explicit wait-group depths — all validated element-exactly against the
+closed-form expectation.  Plus the PipelineSpec / parse_strategy /
+scratch_for unit surface.
+
+The harness input is sized to exactly ``n_tiles`` tiles, so any emitter that
+issues a copy past the stream's end with a *static* index fails Pallas's
+slice validation at trace time — the tests would error, not just miscompare.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.async_pipeline import (ALL_STRATEGIES, PipelineSpec, Strategy,
+                                       TileStream, WriteBack, as_spec,
+                                       compiler_params, emit, parse_strategy,
+                                       scratch_for, writeback_scratch)
+
+TILE_ROWS, WIDTH = 4, 128
+
+
+# --- parse_strategy ---------------------------------------------------------
+
+def test_parse_strategy_case_insensitive_and_passthrough():
+    assert parse_strategy("overlap") is Strategy.OVERLAP
+    assert parse_strategy("OVERLAP") is Strategy.OVERLAP
+    assert parse_strategy("  Drop_Off ") is Strategy.DROP_OFF
+    for s in ALL_STRATEGIES:
+        assert parse_strategy(s) is s
+        assert parse_strategy(s.value.upper()) is s
+
+
+def test_parse_strategy_error_lists_valid_names():
+    with pytest.raises(ValueError) as ei:
+        parse_strategy("cp_async")
+    msg = str(ei.value)
+    assert "cp_async" in msg
+    for s in ALL_STRATEGIES:
+        assert s.value in msg
+
+
+# --- PipelineSpec -----------------------------------------------------------
+
+def test_pipeline_spec_validation_and_hashability():
+    for bad in (dict(depth=0), dict(wait_group=-1), dict(out_depth=0)):
+        with pytest.raises(ValueError):
+            PipelineSpec(**bad)
+    # frozen + hashable: must travel through jit static args
+    assert hash(PipelineSpec()) == hash(PipelineSpec())
+    assert PipelineSpec(depth=3) != PipelineSpec(depth=4)
+    # strategy names are parsed wherever a spec is built
+    assert PipelineSpec(strategy="Sync").strategy is Strategy.SYNC
+    with pytest.raises(ValueError):
+        PipelineSpec(strategy="cp_async")
+
+
+def test_pipeline_spec_ring_depth_and_ahead():
+    assert PipelineSpec(strategy=Strategy.SYNC, depth=4).ring_depth == 1
+    assert PipelineSpec(strategy=Strategy.SYNC, depth=4).ahead == 0
+    assert PipelineSpec(strategy=Strategy.OVERLAP, depth=4).ring_depth == 4
+    assert PipelineSpec(strategy=Strategy.OVERLAP, depth=4).ahead == 3
+    # wait_group caps (and is clamped to) the safe issue-ahead
+    assert PipelineSpec(strategy=Strategy.OVERLAP, depth=4,
+                        wait_group=1).ahead == 1
+    assert PipelineSpec(strategy=Strategy.OVERLAP, depth=3,
+                        wait_group=9).ahead == 2
+    assert PipelineSpec(strategy=Strategy.DROP_OFF, depth=3,
+                        wait_group=0).ahead == 0
+    # async depth=1 still allocates a legal 2-slot ring
+    assert PipelineSpec(strategy=Strategy.OVERLAP, depth=1).ring_depth == 2
+
+
+def test_pipeline_spec_from_config_ignores_unrelated_keys():
+    spec = PipelineSpec.from_config(
+        {"strategy": "drop_off", "depth": 3, "wait_group": 1,
+         "out_depth": 3, "tile_rows": 8, "n_tiles": 4})
+    assert spec == PipelineSpec(strategy=Strategy.DROP_OFF, depth=3,
+                                wait_group=1, out_depth=3)
+    assert PipelineSpec.from_config({}).strategy is Strategy.OVERLAP
+
+
+def test_scratch_for_staging_only_for_sync():
+    """SYNC gets a full-tile staging buffer (the register-round-trip model);
+    async strategies get a 1-element placeholder so scratch arity is fixed."""
+    tile = (8, 128)
+    _, _, stage = scratch_for(Strategy.SYNC, tile, jnp.float32)
+    assert stage.shape == tile
+    for s in (Strategy.REGISTER_BYPASS, Strategy.OVERLAP, Strategy.DROP_OFF):
+        ring, sems, stage = scratch_for(
+            PipelineSpec(strategy=s, depth=3), tile, jnp.float32)
+        assert stage.shape == (1, 1)
+        expect = 1 if s is Strategy.REGISTER_BYPASS else 3
+        assert ring.shape == (expect, *tile)
+
+
+# --- the streaming harness --------------------------------------------------
+
+def _body(x_hbm, o_hbm, in_buf, out_buf, stage, in_sems, out_sems, *,
+          spec, n_tiles):
+    idx = lambda i: (pl.ds(i * TILE_ROWS, TILE_ROWS), slice(None))
+    stream = TileStream(hbm=x_hbm, vmem=in_buf, sem=in_sems, index=idx,
+                        depth=spec.ring_depth)
+    wb = WriteBack(hbm=o_hbm, vmem=out_buf, sem=out_sems, index=idx,
+                   depth=spec.out_depth)
+    if spec.strategy == Strategy.DROP_OFF:
+        emit(spec, [stream], n_tiles,
+             lambda i, vals: wb.push(i, vals[0] * 2.0 + 1.0))
+    else:
+        emit(spec, [stream], n_tiles,
+             lambda i, bufs: wb.push(i, bufs[0][...] * 2.0 + 1.0),
+             staging=[stage])
+    wb.drain(n_tiles)
+
+
+def _static_kernel(x_hbm, o_hbm, *scratch, spec, n_tiles):
+    _body(x_hbm, o_hbm, *scratch, spec=spec, n_tiles=n_tiles)
+
+
+def _traced_kernel(n_ref, x_hbm, o_hbm, *scratch, spec):
+    _body(x_hbm, o_hbm, *scratch, spec=spec, n_tiles=n_ref[0])
+
+
+def run_pipeline(spec, n_tiles, *, traced=False):
+    """Stream ``n_tiles`` tiles of 2x+1 through emit()+WriteBack; the output
+    aliases the input so untouched rows must come back unchanged."""
+    spec = as_spec(spec)
+    rows = max(n_tiles, 1) * TILE_ROWS
+    x = (jnp.arange(rows * WIDTH, dtype=jnp.float32)
+         .reshape(rows, WIDTH)) / 128.0
+    in_buf, in_sems, stage = scratch_for(spec, (TILE_ROWS, WIDTH), x.dtype)
+    out_buf, out_sems = writeback_scratch(spec, (TILE_ROWS, WIDTH), x.dtype)
+    if traced:
+        kernel = functools.partial(_traced_kernel, spec=spec)
+        args = (jnp.array([n_tiles], jnp.int32), x)
+        in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM),
+                    pl.BlockSpec(memory_space=pl.ANY)]
+        aliases = {1: 0}
+    else:
+        kernel = functools.partial(_static_kernel, spec=spec,
+                                   n_tiles=n_tiles)
+        args = (x,)
+        in_specs = [pl.BlockSpec(memory_space=pl.ANY)]
+        aliases = {0: 0}
+    out = pl.pallas_call(
+        kernel, grid=(1,),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=in_specs, out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[in_buf, out_buf, stage, in_sems, out_sems],
+        input_output_aliases=aliases, interpret=True,
+        compiler_params=compiler_params(dimension_semantics=("arbitrary",)),
+    )(*args)
+    want = np.asarray(x).copy()
+    done = n_tiles * TILE_ROWS
+    want[:done] = want[:done] * 2.0 + 1.0
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+
+
+# --- edge regimes -----------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("n_tiles", [0, 2])
+def test_every_strategy_handles_empty_and_short_streams(strategy, n_tiles):
+    run_pipeline(PipelineSpec(strategy=strategy, depth=3), n_tiles)
+
+
+@pytest.mark.parametrize("strategy", [Strategy.OVERLAP, Strategy.DROP_OFF])
+@pytest.mark.parametrize("n_tiles", [1, 3])
+def test_async_n_tiles_at_or_below_depth(strategy, n_tiles):
+    """n_tiles <= depth: the warm-up must not issue (or even trace) a copy
+    past the end of the stream."""
+    run_pipeline(PipelineSpec(strategy=strategy, depth=3), n_tiles)
+    run_pipeline(PipelineSpec(strategy=strategy, depth=5), n_tiles)
+
+
+@pytest.mark.parametrize("strategy", [Strategy.OVERLAP, Strategy.DROP_OFF])
+@pytest.mark.parametrize("depth,wait_group", [(4, None), (4, 1), (5, 2)])
+def test_deep_rings_with_wait_groups(strategy, depth, wait_group):
+    run_pipeline(PipelineSpec(strategy=strategy, depth=depth,
+                              wait_group=wait_group, out_depth=3), 8)
+
+
+@pytest.mark.parametrize("strategy", [Strategy.OVERLAP, Strategy.DROP_OFF])
+def test_wait_group_zero_degenerates_to_no_overlap(strategy):
+    run_pipeline(PipelineSpec(strategy=strategy, depth=3, wait_group=0), 3)
+
+
+@pytest.mark.parametrize("strategy", [Strategy.OVERLAP, Strategy.DROP_OFF])
+@pytest.mark.parametrize("n_tiles", [2, 5])
+def test_traced_n_tiles(strategy, n_tiles):
+    """A runtime tile count (flash attention's causal hi-lo) with a ring
+    deeper than the stream: the warm-up guards must become pl.when and the
+    clamped warm-up indices must keep the trace in bounds."""
+    run_pipeline(PipelineSpec(strategy=strategy, depth=4), n_tiles,
+                 traced=True)
+
+
+def test_bare_strategy_coerces_via_as_spec():
+    run_pipeline(Strategy.OVERLAP, 4)
+    assert as_spec(Strategy.DROP_OFF, depth=3).ring_depth == 3
+    assert as_spec(PipelineSpec(depth=5)) == PipelineSpec(depth=5)

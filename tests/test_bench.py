@@ -247,6 +247,95 @@ def test_cli_run_writes_machine_parseable_json(tmp_path, capsys):
     capsys.readouterr()
 
 
+# --- regime map -------------------------------------------------------------
+
+def _regime_row(strategy, us, depth=2, kernel="stream", **kw):
+    base = dict(
+        scenario=f"regime/{kernel}/{strategy}", kernel=kernel,
+        shape=[256, 256], dtype="float32", strategy=strategy, chip="TPUv5e",
+        metrics={"us_median": us},
+        config={"strategy": strategy, "depth": depth},
+        kind="measured", section="regime", interpret=True, backend="cpu")
+    base.update(kw)
+    return BenchResult(**base)
+
+
+def test_regime_scenarios_registered_for_every_kernel():
+    """The depth-sweep family: one sync baseline + one async strategy at
+    each ring depth, per kernel."""
+    regime = scenarios(tag="regime")
+    assert {s.kernel for s in regime} == set(scenario_mod.KERNELS)
+    for kernel in scenario_mod.KERNELS:
+        cells = [s for s in regime if s.kernel == kernel]
+        assert len(cells) == 4              # sync + d2 + d3 + d4
+        syncs = [s for s in cells if s.strategy is Strategy.SYNC]
+        assert len(syncs) == 1 and not syncs[0].config.get("depth")
+        depths = sorted(s.config["depth"] for s in cells
+                        if s.strategy is not Strategy.SYNC)
+        assert depths == [2, 3, 4]
+        assert all(s.section == "regime" for s in cells)
+
+
+def test_regime_rows_verdicts_and_break_even():
+    from repro.bench import regime_rows
+
+    # async pays from depth 3 on: d2 regresses, d3/d4 beat the baseline
+    rows = [_regime_row("sync", 100.0),
+            _regime_row("overlap", 120.0, depth=2),
+            _regime_row("overlap", 80.0, depth=3),
+            _regime_row("overlap", 90.0, depth=4)]
+    (r,) = regime_rows(rows)
+    assert r.kind == "regime" and r.section == "regime"
+    m = r.metrics
+    assert m["verdict"] == "pays"
+    assert m["break_even_depth"] == 3 and m["best_depth"] == 3
+    assert m["baseline_us"] == 100.0 and m["best_us"] == 80.0
+    assert m["speedup"] == pytest.approx(1.25)
+    assert (m["us_d2"], m["us_d3"], m["us_d4"]) == (120.0, 80.0, 90.0)
+
+    # async never reaches the baseline: hurts, no break-even depth
+    rows = [_regime_row("sync", 100.0),
+            _regime_row("overlap", 150.0, depth=2),
+            _regime_row("overlap", 140.0, depth=3)]
+    (r,) = regime_rows(rows)
+    assert r.metrics["verdict"] == "hurts"
+    assert r.metrics["break_even_depth"] is None
+
+    # within the +/-5% margin: neutral (still has a break-even depth)
+    rows = [_regime_row("sync", 100.0),
+            _regime_row("overlap", 98.0, depth=2)]
+    (r,) = regime_rows(rows)
+    assert r.metrics["verdict"] == "neutral"
+    assert r.metrics["break_even_depth"] == 2
+
+    # partial sweeps never fabricate a verdict
+    assert regime_rows([_regime_row("sync", 100.0)]) == []
+    assert regime_rows([_regime_row("overlap", 80.0)]) == []
+    assert regime_rows([_regime_row("sync", 100.0, section="fig3"),
+                        _regime_row("overlap", 80.0, section="fig3")]) == []
+
+
+def test_sweep_appends_regime_verdicts(tmp_path):
+    """An end-to-end depth sweep over one kernel's regime cells must yield
+    the 4 measured rows, the projections, and exactly one verdict row."""
+    scs = scenarios(tag="regime", kernel="stream")
+    assert len(scs) == 4
+    opts = runner.RunOptions(warmup=0, repeats=1,
+                             registry=Registry(str(tmp_path / "reg.json")))
+    report = runner.sweep(scs, chips=["TPUv5e"], opts=opts)
+    regime = [r for r in report.results if r.kind == "regime"]
+    assert len(regime) == 1
+    m = regime[0].metrics
+    assert m["verdict"] in ("pays", "neutral", "hurts")
+    assert {"us_d2", "us_d3", "us_d4"} <= set(m)
+    assert m["baseline_us"] > 0
+    # round-trips through the schema-v2 artifact
+    path = str(tmp_path / "BENCH_regime.json")
+    report.save(path)
+    got = BenchReport.load(path)
+    assert [r for r in got.results if r.kind == "regime"] == regime
+
+
 # --- benchmarks/run.py shim -------------------------------------------------
 
 def _import_benchmarks_run():

@@ -149,17 +149,57 @@ def test_pruning_drops_analytically_dominated():
     survivors, dropped = space.pruned(keep_ratio=1.5)
     assert survivors and dropped
     best = min(c.predicted_us for c in survivors)
-    # survivors all within the ratio; every non-vmem drop is outside it
+    # survivors all within the ratio; every dominance-drop is outside it
+    # (vmem and break-even drops are the other two, non-ratio prune classes)
     for c in survivors:
         assert c.predicted_us <= 1.5 * best * (1 + 1e-9)
     for c in dropped:
-        if "vmem" not in c.why_pruned:
+        if "vmem" not in c.why_pruned and "break-even" not in c.why_pruned:
             assert c.predicted_us > 1.5 * best
     # SYNC is strictly dominated by REGISTER_BYPASS in the model
     # (staging re-pass: 1.5*t_m vs t_m), so a tight ratio always drops it
     tight, _ = space.pruned(keep_ratio=1.01)
     assert tight
     assert all(c.config["strategy"] != Strategy.SYNC for c in tight)
+
+
+def test_pruning_drops_past_break_even_depths():
+    """A ring whose issue-ahead covers the whole tile stream spends the
+    entire memory time in fill — analytically infeasible, pruned before
+    measurement.  stream (512,256) enumerates n_tiles=2 cells where depth 3+
+    (issue-ahead >= 2) crosses that bound."""
+    space = SearchSpace("stream", (512, 256))
+    survivors, dropped = space.pruned()
+    be = [c for c in dropped if "break-even" in c.why_pruned]
+    assert be, "expected at least one analytically infeasible depth pruned"
+    from repro.tuning import issue_ahead
+    for c in be:
+        ahead = issue_ahead(c.config["depth"], c.config.get("wait_group"))
+        assert ahead >= c.config["n_tiles"]
+    # and no surviving async candidate is past its break-even point
+    for c in survivors:
+        if c.config["strategy"] in (Strategy.OVERLAP, Strategy.DROP_OFF):
+            ahead = issue_ahead(c.config["depth"], c.config.get("wait_group"))
+            assert ahead < c.config["n_tiles"]
+
+
+def test_search_space_covers_depth_and_wait_group_axes():
+    """The tentpole axes are actually enumerated: ring depths {2,3,4} and,
+    at depth > 2, both the deepest wait group (None) and the shallow one."""
+    from repro.tuning import strategy_depth_waits
+    shapes = {s for s in strategy_depth_waits(Strategy.OVERLAP)}
+    assert {d for d, _ in shapes} == {2, 3, 4}
+    assert (3, 1) in shapes and (4, 1) in shapes and (4, None) in shapes
+    assert strategy_depth_waits(Strategy.SYNC) == ((2, None),)
+    cands = SearchSpace("stream", (512, 256)).candidates()
+    seen = {(c.config["depth"], c.config["wait_group"]) for c in cands
+            if c.config["strategy"] == Strategy.OVERLAP}
+    assert seen == set(shapes)
+    # wait_group changes the prediction at depth 4 (bandwidth vs fill)
+    deep = predict_time(Strategy.OVERLAP, 1.0, 1e9, depth=4, n_tiles=64)
+    shallow = predict_time(Strategy.OVERLAP, 1.0, 1e9, depth=4, n_tiles=64,
+                           wait_group=1)
+    assert deep != shallow
 
 
 def test_predict_time_strategy_ordering():
