@@ -137,6 +137,45 @@ def main():
     # CLI equivalent:
     #   python -m repro.bench.cli sweep --tag regime --json BENCH_regime.json
 
+    # --- Observability (repro.obs) ------------------------------------------
+    # Tracing is off by default and free when off.  Enabled, every layer of
+    # the measurement stack emits nested spans — sweep -> scenario ->
+    # warmup/timed trials (and tune -> candidate in the autotuner) — which
+    # export to JSONL or a Chrome trace that https://ui.perfetto.dev loads
+    # directly.  The serving loop records TTFT / per-token latency /
+    # occupancy into labeled metrics the same way.
+    from repro.obs.trace import tracer
+    from repro.obs.compare import compare_reports
+
+    t = tracer()
+    t.clear()
+    t.enable()
+    res2 = runner.run_scenario(sc, runner.RunOptions(
+        repeats=2, registry=registry))
+    t.disable()
+    spans = t.spans()
+    trace_path = os.path.join(tempfile.mkdtemp(), "trace.jsonl")
+    t.save_jsonl(trace_path)
+    print(f"obs: {len(spans)} spans "
+          f"({', '.join(sorted({s.name for s in spans}))}); "
+          f"row trace_id={res2.trace_id}; jsonl at {trace_path}")
+
+    # the regression gate: diff two reports using each cell's own measured
+    # spread (median +/- k*IQR of the baseline's kept trials), not a naive
+    # percent threshold.  Identical runs gate clean.
+    rep_a, rep_b = runner.new_report(), runner.new_report()
+    rep_a.add(res)
+    rep_b.add(res2)
+    cmp_res = compare_reports(rep_a, rep_b)
+    print(f"obs: gate {'REGRESSED' if cmp_res.n_regressions else 'ok'} "
+          f"({cmp_res.counts()})")
+    # CLI equivalents:
+    #   python -m repro.bench.cli sweep --smoke --trace t.jsonl \
+    #       --chrome-trace t.chrome.json
+    #   python -m repro.obs.cli summary --trace t.jsonl
+    #   python -m repro.obs.cli compare BENCH_base.json BENCH_new.json
+    #   python -m repro.launch.serve --ragged --metrics-json m.json
+
 
 if __name__ == "__main__":
     main()

@@ -123,17 +123,87 @@ def bench_tables(pattern):
                   f"figure rows keep their original table/name keys)*")
 
 
+def compare_tables(pattern):
+    """Render obs-compare verdict documents (the regression gate's output)."""
+    from repro.obs.compare import CompareResult
+    for path in sorted(glob.glob(pattern)):
+        try:
+            res = CompareResult.load(path)
+        except (ValueError, json.JSONDecodeError, OSError) as e:
+            print(f"\n*(skipping {path}: {e})*")
+            continue
+        c = res.counts()
+        gate = "**REGRESSED**" if res.n_regressions else "ok"
+        norm = (f", host scale {res.host_scale:.3f}" if res.normalized
+                else "")
+        print(f"\n### Regression gate: {os.path.basename(path)} "
+              f"(k={res.k:g}, rel floor {res.rel_floor:.0%}{norm}) "
+              f"— gate {gate}\n")
+        print("| verdict | scenario | chip | base us | new us | band us "
+              "| delta |")
+        print("|---|---|---|---|---|---|---|")
+        for v in res.verdicts:
+            verdict = f"**{v.verdict}**" if v.verdict == "regress" \
+                else v.verdict
+            base = f"{v.base_us:,.1f}" if v.base_us is not None else "—"
+            new = f"{v.adj_new_us:,.1f}" if v.adj_new_us is not None else \
+                (f"{v.new_us:,.1f}" if v.new_us is not None else "—")
+            delta = (f"{v.delta_pct:+.1f}%"
+                     if v.verdict in ("pass", "regress", "improve") else "—")
+            print(f"| {verdict} | {v.scenario} | {v.chip} | {base} | {new} "
+                  f"| {v.band_us:,.2f} | {delta} |")
+        print(f"\n*({c['pass']} pass, {c['regress']} regress, "
+              f"{c['improve']} improve, {c['new']} new, "
+              f"{c['missing']} missing)*")
+
+
+def metrics_tables(pattern):
+    """Render obs-metrics snapshots (serving TTFT/latency/occupancy)."""
+    for path in sorted(glob.glob(pattern)):
+        try:
+            doc = json.load(open(path))
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"\n*(skipping {path}: {e})*")
+            continue
+        if doc.get("kind") != "obs-metrics":
+            print(f"\n*(skipping {path}: not an obs-metrics snapshot)*")
+            continue
+        print(f"\n### Serving metrics: {os.path.basename(path)}\n")
+        print("| metric | labels | kind | count | mean | p50 | p90 | p99 "
+              "| value |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in doc.get("rows", []):
+            labels = ",".join(f"{k}={v}" for k, v in
+                              sorted(r.get("labels", {}).items())) or "—"
+            if r["kind"] == "histogram":
+                print(f"| {r['name']} | {labels} | histogram "
+                      f"| {r['count']} | {r['mean']:,.2f} | {r['p50']:,.2f} "
+                      f"| {r['p90']:,.2f} | {r['p99']:,.2f} | — |")
+            else:
+                print(f"| {r['name']} | {labels} | {r['kind']} | — | — | — "
+                      f"| — | — | {r['value']:g} |")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--bench", default="BENCH_*.json", metavar="GLOB",
                     help="benchmark trajectory files to render "
                          "(default: BENCH_*.json in the cwd)")
+    ap.add_argument("--compare", default=None, metavar="GLOB",
+                    help="obs-compare verdict JSONs (from "
+                         "`python -m repro.obs.cli compare --json`)")
+    ap.add_argument("--metrics", default=None, metavar="GLOB",
+                    help="obs-metrics snapshots (from serve --metrics-json)")
     ap.add_argument("--no-dryrun", action="store_true",
                     help="skip the dry-run roofline tables")
     args = ap.parse_args(argv)
     if not args.no_dryrun:
         dryrun_tables()
     bench_tables(args.bench)
+    if args.compare:
+        compare_tables(args.compare)
+    if args.metrics:
+        metrics_tables(args.metrics)
 
 
 if __name__ == "__main__":

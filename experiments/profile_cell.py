@@ -1,87 +1,29 @@
 """Profile one dry-run cell: top ops by weighted bytes / flops / wire.
-    PYTHONPATH=src python experiments/profile_cell.py <arch> <shape>"""
-import os, sys
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    PYTHONPATH=src python experiments/profile_cell.py <arch> <shape>
+
+Thin shim over ``repro.launch.profile`` (also reachable as
+``python -m repro.obs.cli profile``).  The host-device-count flag is
+APPENDED to any pre-set ``XLA_FLAGS`` — a bare overwrite here used to
+silently drop flags the caller exported (e.g. dump_to/deterministic-ops).
+The append happens inline, before any repro/jax import, so it is in place
+no matter when the backend initializes.
+"""
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        f"{os.environ.get('XLA_FLAGS', '')} {_FLAG}=512".strip()
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax, jax.numpy as jnp
-from repro.core.hlo_cost import top_costs
-import repro.launch.dryrun as D
-import repro.launch.train as T
-from repro.configs import get_config
-from repro.core.config import RunConfig, get_shape
-from repro.distributed import sharding as shd
-from repro.models import build_model
-from repro.optim import adamw_init, moment_shardings
-from repro.launch.mesh import make_production_mesh
-
-
-def compile_cell(arch, shape_name):
-    cfg = get_config(arch)
-    shape = get_shape(shape_name)
-    mesh = make_production_mesh()
-    import numpy as np
-    data = int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.shape]))
-    micro = max(1, shape.global_batch // data) if shape.mode == "train" else 1
-    from repro.core import hardware
-    tp = mesh.shape.get("model", 1)
-    state_gb = cfg.param_count() * 4 * 3.3 / tp / 2 ** 30
-    fsdp = shape.mode == "train" and state_gb > 0.5 * (hardware.HBM_BYTES / 2 ** 30)
-    run = RunConfig(microbatches=micro, fsdp=fsdp)
-    model = build_model(cfg)
-    with jax.set_mesh(mesh):
-        rules = D.build_rules(mesh, cfg, shape, shape.mode, run)
-        with shd.use_rules(rules):
-            p_shapes, p_axes = D.abstract_params(model)
-        if shape.mode in ("prefill", "decode"):
-            p_shapes = jax.tree.map(lambda s: jax.ShapeDtypeStruct(
-                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype), p_shapes)
-        p_sh = shd.tree_shardings_safe(p_axes, p_shapes, rules)
-        specs = D.input_specs(cfg, shape)
-        b_sh = D.batch_shardings(specs, rules)
-        if shape.mode == "train":
-            T.set_param_axes(p_axes)
-            opt_shapes = jax.eval_shape(adamw_init, p_shapes)
-            msh = moment_shardings(p_axes, jax.tree.map(
-                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), p_shapes), rules)
-            opt_sh = type(opt_shapes)(step=jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec()), m=msh, v=msh)
-            comp = jax.jit(T.build_train_step(model, run, rules),
-                           in_shardings=(p_sh, opt_sh, b_sh,
-                                         jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())),
-                           donate_argnums=(0, 1)).lower(
-                p_shapes, opt_shapes, specs,
-                jax.ShapeDtypeStruct((), jnp.int32)).compile()
-        elif shape.mode == "prefill":
-            def prefill_fn(params, batch):
-                with shd.use_rules(rules):
-                    return model.prefill(params, batch)
-            comp = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh)).lower(
-                p_shapes, specs).compile()
-        else:
-            st_shapes, st_sh = D.state_specs(cfg, shape, rules)
-            def decode_fn(params, state, tokens):
-                with shd.use_rules(rules):
-                    return model.decode_step(params, state, tokens)
-            comp = jax.jit(decode_fn, in_shardings=(p_sh, st_sh, b_sh["tokens"]),
-                           donate_argnums=(1,)).lower(
-                p_shapes, st_shapes, specs["tokens"]).compile()
-    return comp
+from repro.launch.profile import (compile_cell,  # noqa: F401,E402  (re-exported for callers of the old module)
+                                  format_report, profile_report)
 
 
 def main():
     arch, shape = sys.argv[1], sys.argv[2]
-    comp = compile_cell(arch, shape)
-    by_bytes, by_flops, by_wire = top_costs(comp.as_text(), k=10)
-    print(f"=== {arch} {shape}: top weighted fused-bytes ops ===")
-    for wb, w, line in by_bytes:
-        print(f"{wb:.3e} (w={w:.0f}) {line[:120]}")
-    print("=== top weighted flops ===")
-    for wf, w, line in by_flops[:6]:
-        print(f"{wf:.3e} (w={w:.0f}) {line[:120]}")
-    print("=== top weighted wire ===")
-    for ww, w, line in by_wire[:8]:
-        print(f"{ww:.3e} (w={w:.0f}) {line[:120]}")
+    print(format_report(arch, shape, profile_report(arch, shape, k=10)))
 
 
 if __name__ == "__main__":

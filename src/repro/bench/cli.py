@@ -94,6 +94,33 @@ def _write_json(report: BenchReport, args, stream) -> None:
         print(f"# wrote {len(report)} rows to {args.json}", file=stream)
 
 
+def _start_trace(args):
+    """Enable the obs tracer when a trace output was requested."""
+    if getattr(args, "trace", None) or getattr(args, "chrome_trace", None):
+        from ..obs.trace import tracer
+        t = tracer()
+        t.clear()
+        t.enable()
+        return t
+    return None
+
+
+def _write_trace(t, args, stream) -> None:
+    if t is None:
+        return
+    import json as _json
+    if args.trace:
+        n = t.save_jsonl(args.trace)
+        print(f"# wrote {n} spans to {args.trace}", file=stream)
+    if args.chrome_trace:
+        doc = t.chrome_trace()
+        with open(args.chrome_trace, "w") as f:
+            _json.dump(doc, f)
+        print(f"# wrote {len(doc['traceEvents'])} trace events to "
+              f"{args.chrome_trace} (load in https://ui.perfetto.dev)",
+              file=stream)
+
+
 def cmd_list(args) -> int:
     scs = scenario.scenarios(**_filters(args))
     if not scs:
@@ -114,10 +141,12 @@ def cmd_run(args) -> int:
     stream = _progress_stream(args)
     scs = _select(args)
     opts = _options(args, stream)
+    t = _start_trace(args)
     report = runner.run_scenarios(scs, opts)
     bad = [r for r in report.results
            if r.metrics.get("check_ok") is False]
     _write_json(report, args, stream)
+    _write_trace(t, args, stream)
     if bad:
         print(f"error: {len(bad)} scenario(s) failed the oracle check: "
               f"{[r.scenario for r in bad]}", file=sys.stderr)
@@ -136,6 +165,7 @@ def cmd_sweep(args) -> int:
     opts = _options(args, stream)
     # --chip restricts the model projection, not the host's provenance chip
     opts.chip = None
+    t = _start_trace(args)
     report = runner.sweep(scs, chips, opts)
     measured = sum(1 for r in report.results if r.kind == "measured")
     regime = [r for r in report.results if r.kind == "regime"]
@@ -152,6 +182,7 @@ def cmd_sweep(args) -> int:
               f"best=d{r.metrics['best_depth']} "
               f"({r.metrics['speedup']:.2f}x vs sync)", file=stream)
     _write_json(report, args, stream)
+    _write_trace(t, args, stream)
     return 0
 
 
@@ -189,6 +220,12 @@ def main(argv=None) -> int:
         p.add_argument("--json", default=None, metavar="PATH",
                        help="write the schema-v2 report ('-' for stdout; "
                             "progress then goes to stderr)")
+        p.add_argument("--trace", default=None, metavar="PATH",
+                       help="enable span tracing and write the span JSONL "
+                            "(repro.obs) to PATH")
+        p.add_argument("--chrome-trace", default=None, metavar="PATH",
+                       help="enable span tracing and write a Perfetto/"
+                            "chrome://tracing JSON to PATH")
 
     p = sub.add_parser("list", help="print registered scenarios (no run)")
     add_filters(p)

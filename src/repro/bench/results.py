@@ -50,6 +50,7 @@ class BenchResult:
     config_source: str = "default"      # "tuned" | "default" | "scenario" |
     #                                     "legacy-v1"
     tuned_key: Optional[str] = None     # tuning-registry key when tuned
+    trace_id: Optional[str] = None      # obs scenario-span id (when traced)
     kind: str = "measured"              # "measured" | "model"
     section: str = ""                   # paper figure/table this row feeds
     interpret: bool = True

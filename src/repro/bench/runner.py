@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import hardware
+from ..obs.trace import get_tracer
 from ..tuning.autotuner import _default_registry, decode_config
 from ..tuning.registry import Registry
 from ..tuning.search_space import SPECS, predict_time
@@ -121,20 +122,31 @@ def run_scenario(sc: Scenario, opts: Optional[RunOptions] = None, *,
     fn = lambda: call_kernel(sc, args, cfg, opts.interpret)
 
     metrics: Dict[str, object] = {}
-    warmup = opts.warmup
-    if opts.check:
-        # the oracle call compiles and runs the kernel, so it doubles as
-        # one warmup iteration — interpret-mode calls cost seconds
-        out = jax.block_until_ready(fn())
-        warmup = max(warmup - 1, 0)
-        err = check_output(sc, args, out)
-        metrics["max_err"] = err
-        metrics["check_ok"] = bool(err <= CHECK_TOL[sc.kernel])
-        if not metrics["check_ok"]:
-            log.warning("scenario %s: max_err %.3g exceeds tol %.3g",
-                        sc.name, err, CHECK_TOL[sc.kernel])
-    stats = time_callable(fn, warmup=warmup, repeats=opts.repeats)
-    metrics.update(stats.to_metrics())
+    # the scenario span carries the full config provenance, so a Perfetto
+    # view of a sweep shows *what* ran in each box, not just how long
+    with get_tracer().span(
+            f"scenario:{sc.name}", kernel=sc.kernel,
+            shape="x".join(map(str, sc.shape)), dtype=sc.dtype,
+            strategy=_strategy_name(cfg), config_source=source,
+            tuned_key=tuned_key, chip=opts.resolved_chip(),
+            interpret=opts.interpret, repeats=opts.repeats) as span:
+        warmup = opts.warmup
+        if opts.check:
+            # the oracle call compiles and runs the kernel, so it doubles
+            # as one warmup iteration — interpret-mode calls cost seconds
+            with get_tracer().span("oracle"):
+                out = jax.block_until_ready(fn())
+                err = check_output(sc, args, out)
+            warmup = max(warmup - 1, 0)
+            metrics["max_err"] = err
+            metrics["check_ok"] = bool(err <= CHECK_TOL[sc.kernel])
+            if not metrics["check_ok"]:
+                log.warning("scenario %s: max_err %.3g exceeds tol %.3g",
+                            sc.name, err, CHECK_TOL[sc.kernel])
+        stats = time_callable(fn, warmup=warmup, repeats=opts.repeats)
+        metrics.update(stats.to_metrics())
+        if span is not None:
+            span.attrs["us_median"] = stats.median
 
     flops, nbytes = _flops_bytes(sc, cfg)
     metrics["intensity"] = flops / nbytes if nbytes else 0.0
@@ -149,8 +161,9 @@ def run_scenario(sc: Scenario, opts: Optional[RunOptions] = None, *,
         dtype=sc.dtype, strategy=_strategy_name(cfg),
         chip=opts.resolved_chip(), metrics=metrics,
         config={k: getattr(v, "value", v) for k, v in cfg.items()},
-        config_source=source, tuned_key=tuned_key, kind="measured",
-        section=sc.section, interpret=opts.interpret,
+        config_source=source, tuned_key=tuned_key,
+        trace_id=span.span_id if span is not None else None,
+        kind="measured", section=sc.section, interpret=opts.interpret,
         backend=jax.default_backend(), jax_version=jax.__version__,
         created_at=now_iso())
     if opts.emit:
@@ -215,12 +228,14 @@ def sweep(scs: Optional[Sequence[Scenario]] = None,
     for name in chips:
         hardware.get_chip(name)         # fail fast on a typo'd chip
     report = new_report()
-    for sc in scs:
-        resolved = resolve_config(sc, opts)     # once per scenario
-        report.add(run_scenario(sc, opts, resolved=resolved))
-        for chip_name in chips:
-            report.add(project_scenario(sc, chip_name, opts,
-                                        resolved=resolved))
+    with get_tracer().span("sweep", n_scenarios=len(scs),
+                           n_chips=len(chips)):
+        for sc in scs:
+            resolved = resolve_config(sc, opts)     # once per scenario
+            report.add(run_scenario(sc, opts, resolved=resolved))
+            for chip_name in chips:
+                report.add(project_scenario(sc, chip_name, opts,
+                                            resolved=resolved))
     # fold any regime/* depth-sweep measurements into per-cell
     # "async pays / async hurts" verdict rows (kind="regime")
     for row in regime_rows(report.results):

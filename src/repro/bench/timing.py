@@ -5,6 +5,14 @@ calls to exclude compilation/tracing, ``repeats`` timed calls, one-sided
 IQR outlier rejection before the median is taken) lives here and only here.
 ``tuning.autotuner`` and every ``repro.bench`` scenario import this module;
 no other file may hand-roll a perf_counter loop.
+
+When ``repro.obs`` tracing is enabled, every trial becomes a span (named
+``warmup``/``timed``, outlier-flagged after rejection) nested under
+whatever span the caller holds open (the runner's scenario span).  The
+spans are recorded *retroactively* from the perf_counter readings the loop
+takes anyway — the timed region contains zero tracing code, and the
+disabled path is a single attribute check outside the timed window, so
+enabling the subsystem costs the measurement nothing.
 """
 from __future__ import annotations
 
@@ -15,7 +23,10 @@ from typing import Any, Callable, List
 
 import jax
 
-__all__ = ["TimingStats", "time_callable", "reject_outliers"]
+from ..obs.trace import get_tracer
+
+__all__ = ["TimingStats", "time_callable", "reject_outliers",
+           "outlier_flags"]
 
 
 @dataclass
@@ -42,36 +53,66 @@ class TimingStats:
             if len(self.times_us) > 1 else 0.0
 
     def to_metrics(self) -> dict:
-        """The flat metric dict every result row carries."""
+        """The flat metric dict every result row carries.  ``times_us``
+        (the kept samples) rides along so the obs regression gate can use
+        the cell's own measured spread instead of a percent threshold."""
         return {"us_median": self.median, "us_mean": self.mean,
                 "us_min": self.best, "us_std": self.std,
                 "n_trials": len(self.times_us),
-                "n_outliers": self.n_outliers}
+                "n_outliers": self.n_outliers,
+                "times_us": [round(t, 3) for t in self.times_us]}
 
 
 def time_callable(fn: Callable[[], Any], *, warmup: int = 1,
                   repeats: int = 5, outlier_iqr: float = 3.0) -> TimingStats:
     """Wall-time ``fn`` (which must return a jax value to block on).
-    ``warmup=0`` is honored: first-call compile cost lands in the timings."""
+    ``warmup=0`` is honored: first-call compile cost lands in the timings
+    (where the IQR rejection flags it as an outlier rather than letting it
+    silently poison the median)."""
+    tracer = get_tracer()
+    traced = tracer.enabled
+    warm_marks = []
     for _ in range(max(warmup, 0)):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn())
+        if traced:
+            warm_marks.append((t0, time.perf_counter()))
     times = []
+    marks = []
     for _ in range(max(repeats, 1)):
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
-        times.append((time.perf_counter() - t0) * 1e6)
-    kept = reject_outliers(times, outlier_iqr)
+        t1 = time.perf_counter()
+        times.append((t1 - t0) * 1e6)
+        if traced:
+            marks.append((t0, t1))
+    flags = outlier_flags(times, outlier_iqr)
+    kept = [t for t, cut in zip(times, flags) if not cut]
+    if traced:
+        for i, (w0, w1) in enumerate(warm_marks):
+            tracer.record("warmup", w0, w1, trial=i, phase="warmup")
+        for i, ((t0, t1), cut) in enumerate(zip(marks, flags)):
+            tracer.record("timed", t0, t1, trial=i, phase="timed",
+                          outlier=bool(cut))
     return TimingStats(times_us=kept, n_outliers=len(times) - len(kept))
+
+
+def outlier_flags(times: List[float], k: float) -> List[bool]:
+    """Per-sample rejection flags (True = slow outlier) under the one-sided
+    median + k*IQR rule; the all-flagged case degrades to keeping all."""
+    if len(times) < 4 or k <= 0:
+        return [False] * len(times)
+    s = sorted(times)
+    q1 = s[len(s) // 4]
+    q3 = s[(3 * len(s)) // 4]
+    cut = statistics.median(s) + k * max(q3 - q1, 1e-9)
+    flags = [t > cut for t in times]
+    if all(flags):
+        return [False] * len(times)
+    return flags
 
 
 def reject_outliers(times: List[float], k: float) -> List[float]:
     """Drop samples above median + k*IQR (one-sided: slow outliers only —
     preemptions / GC pauses inflate, nothing deflates, a timing)."""
-    if len(times) < 4 or k <= 0:
-        return list(times)
-    s = sorted(times)
-    q1 = s[len(s) // 4]
-    q3 = s[(3 * len(s)) // 4]
-    cut = statistics.median(s) + k * max(q3 - q1, 1e-9)
-    kept = [t for t in times if t <= cut]
-    return kept or list(times)
+    return [t for t, cut in zip(times, outlier_flags(times, k)) if not cut]

@@ -5,6 +5,19 @@
 and steps the whole batch one token at a time — the standard static-batch
 TPU serving shape (decode_32k / long_500k lower exactly this step).
 
+Ragged prompts are LEFT-padded to the batch max and the pad slots are
+masked out of the KV cache (``kpos = -1``, which ``attend_decode`` already
+treats as "empty"), so a mixed-length batch decodes over real tokens only.
+Left padding keeps every sequence's last prompt token in the final
+position (the one ``prefill`` samples from), and the uniform position
+shift it introduces is invariant under RoPE's relative-position attention;
+only prefill-time attention still sees the pad keys, which is the standard
+static-batch approximation.
+
+Every request is measured (``repro.obs.metrics``): time-to-first-token,
+per-token decode latency, batch occupancy, and queue depth — the metrics
+the ROADMAP's latency-SLO / tokens-per-second serving scenarios gate on.
+
 Run as a script it serves a reduced model locally:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --requests 4
 """
@@ -23,6 +36,8 @@ import numpy as np
 from ..core.config import ArchConfig
 from ..distributed import sharding as shd
 from ..models import build_model
+from ..obs import metrics as obs_metrics
+from ..obs.trace import get_tracer
 
 log = logging.getLogger("repro.serve")
 
@@ -52,14 +67,55 @@ class Request:
     max_new: int
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # filled in by the loop ---------------------------------------------------
+    ttft_ms: Optional[float] = None     # submission -> first token (incl.
+    #                                     queue wait)
+    total_ms: Optional[float] = None    # submission -> request finished
+
+
+def pack_prompts(active: List[Request], batch: int):
+    """LEFT-pad ragged prompts into one (batch, max_len) int32 array.
+    Returns (tokens, pads) where ``pads[i]`` is request i's pad count."""
+    max_len = max(len(r.prompt) for r in active)
+    tokens = np.zeros((batch, max_len), np.int32)
+    pads = np.zeros((batch,), np.int32)
+    for i, r in enumerate(active):
+        p = np.asarray(r.prompt, np.int32).reshape(-1)
+        pads[i] = max_len - len(p)
+        tokens[i, pads[i]:] = p
+    return tokens, pads
+
+
+def mask_padded_cache(state, pads: np.ndarray):
+    """Rewrite the pad slots' cached positions to -1 so ``attend_decode``
+    (which masks ``pos_cache < 0`` as empty) never attends them."""
+    kpos = getattr(state, "kpos", None)
+    if kpos is None or not np.any(pads):
+        return state
+    slot = jnp.arange(kpos.shape[-1], dtype=jnp.int32)
+    pad_col = jnp.asarray(pads, jnp.int32)[None, :, None]
+    masked = jnp.where(slot[None, None, :] < pad_col, -1, kpos)
+    return state._replace(kpos=masked)
 
 
 class ServingLoop:
     """Static-batch continuous serving: all sequences decode in lockstep;
-    finished slots are refilled from the queue at the next prefill."""
+    finished slots are refilled from the queue at the next prefill.
+
+    ``metrics`` is a ``repro.obs.metrics.Registry`` (a private one by
+    default, so concurrent loops and tests never share counters):
+
+      serve.ttft_ms           histogram, per request
+      serve.decode_ms         histogram, per decode step (per-token latency)
+      serve.batch_occupancy   histogram, active/batch per prefill
+      serve.queue_depth       gauge, requests still queued
+      serve.requests_total    counter
+      serve.tokens_total      counter
+    """
 
     def __init__(self, cfg: ArchConfig, params, *, batch: int,
-                 rules=None, seed: int = 0, max_new: int = 64):
+                 rules=None, seed: int = 0, max_new: int = 64,
+                 metrics: Optional[obs_metrics.Registry] = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -68,6 +124,8 @@ class ServingLoop:
         self._fns = {}          # prefill budget -> (prefill, decode)
         self.rules = rules
         self.key = jax.random.PRNGKey(seed)
+        self.metrics = metrics if metrics is not None \
+            else obs_metrics.Registry()
 
     def _get_fns(self, prompt_len: int):
         budget = prompt_len + self.max_new + 1
@@ -78,81 +136,137 @@ class ServingLoop:
 
     def run(self, requests: List[Request], temperature: float = 0.0,
             max_steps: int = 64) -> Dict[int, List[int]]:
+        tracer = get_tracer()
+        m = self.metrics
+        ttft_h = m.histogram("serve.ttft_ms")
+        dec_h = m.histogram("serve.decode_ms")
+        occ_h = m.histogram("serve.batch_occupancy")
+        qdepth = m.gauge("serve.queue_depth")
+        req_c = m.counter("serve.requests_total")
+        tok_c = m.counter("serve.tokens_total")
+
+        t_submit = time.perf_counter()  # all requests enqueue at run start
         queue = list(requests)
         results: Dict[int, List[int]] = {}
         while queue:
             active = queue[:self.batch]
             queue = queue[self.batch:]
-            prompts = np.stack([r.prompt for r in active])
-            pad = self.batch - len(active)
-            if pad:
-                prompts = np.concatenate(
-                    [prompts, np.zeros((pad, prompts.shape[1]), np.int32)])
-            prefill_fn, decode_fn = self._get_fns(prompts.shape[1])
-            batch = {"tokens": jnp.asarray(prompts)}
-            if self.cfg.is_encdec:
-                batch["frames"] = jnp.zeros(
-                    (self.batch, prompts.shape[1], self.cfg.d_model),
-                    jnp.float32)
-            if self.cfg.n_patches:
-                batch["patches"] = jnp.zeros(
-                    (self.batch, self.cfg.n_patches, self.cfg.d_model),
-                    jnp.float32)
-            logits, state = prefill_fn(self.params, batch)
-            toks = sample(logits, self.key, temperature)[:, None]
-            for step in range(max_steps):
-                for i, r in enumerate(active):
-                    if not r.done and len(r.out_tokens) < r.max_new:
-                        r.out_tokens.append(int(toks[i, 0]))
-                    elif not r.done:
-                        r.done = True
-                if all(r.done or len(r.out_tokens) >= r.max_new
-                       for r in active):
-                    break
-                self.key, sub = jax.random.split(self.key)
-                logits, state = decode_fn(self.params, state,
-                                          toks.astype(jnp.int32))
-                toks = sample(logits, sub, temperature)[:, None]
-            for r in active:
-                results[r.uid] = r.out_tokens
+            qdepth.set(len(queue))
+            occ_h.observe(len(active) / self.batch)
+            with tracer.span("serve.batch", n_active=len(active),
+                             queued=len(queue)):
+                prompts, pads = pack_prompts(active, self.batch)
+                prefill_fn, decode_fn = self._get_fns(prompts.shape[1])
+                batch = {"tokens": jnp.asarray(prompts)}
+                if self.cfg.is_encdec:
+                    batch["frames"] = jnp.zeros(
+                        (self.batch, prompts.shape[1], self.cfg.d_model),
+                        jnp.float32)
+                if self.cfg.n_patches:
+                    batch["patches"] = jnp.zeros(
+                        (self.batch, self.cfg.n_patches, self.cfg.d_model),
+                        jnp.float32)
+                with tracer.span("serve.prefill",
+                                 prompt_len=int(prompts.shape[1])):
+                    logits, state = prefill_fn(self.params, batch)
+                    state = mask_padded_cache(state, pads)
+                    toks = sample(logits, self.key, temperature)[:, None]
+                    toks = jax.block_until_ready(toks)
+                t_first = time.perf_counter()
+                for r in active:
+                    r.ttft_ms = (t_first - t_submit) * 1e3
+                    ttft_h.observe(r.ttft_ms)
+                for step in range(max_steps):
+                    for i, r in enumerate(active):
+                        if not r.done and len(r.out_tokens) < r.max_new:
+                            r.out_tokens.append(int(toks[i, 0]))
+                        elif not r.done:
+                            r.done = True
+                    if all(r.done or len(r.out_tokens) >= r.max_new
+                           for r in active):
+                        break
+                    self.key, sub = jax.random.split(self.key)
+                    t0 = time.perf_counter()
+                    with tracer.span("serve.decode_step", step=step):
+                        logits, state = decode_fn(self.params, state,
+                                                  toks.astype(jnp.int32))
+                        toks = sample(logits, sub, temperature)[:, None]
+                        toks = jax.block_until_ready(toks)
+                    dec_h.observe((time.perf_counter() - t0) * 1e3)
+                t_done = time.perf_counter()
+                for r in active:
+                    r.total_ms = (t_done - t_submit) * 1e3
+                    results[r.uid] = r.out_tokens
+                    req_c.inc()
+                    tok_c.inc(len(r.out_tokens))
+        qdepth.set(0)
         return results
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--ragged", action="store_true",
+                    help="draw each prompt's length from [4, prompt-len] "
+                         "to exercise the left-pad + mask path")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--tuning-registry", default=None,
                     help="autotuning registry JSON (default "
                          "./tuning_registry.json)")
-    args = ap.parse_args()
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the serving metrics snapshot "
+                         "(repro.obs.metrics) to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable span tracing; write the span JSONL to PATH")
+    args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO)
     from ..tuning import apply_tuned_kernel_defaults
     apply_tuned_kernel_defaults(args.tuning_registry)
+    if args.trace:
+        get_tracer().enable()
 
     from ..configs import get_smoke_config
     from ..distributed.sharding import split_tree
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
-    loop = ServingLoop(cfg, params, batch=args.batch)
+    loop = ServingLoop(cfg, params, batch=args.batch, max_new=args.max_new)
     rng = np.random.default_rng(0)
+    lens = (rng.integers(4, args.prompt_len + 1, args.requests)
+            if args.ragged else [args.prompt_len] * args.requests)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab,
-                                        (args.prompt_len,)).astype(np.int32),
+                                        (int(lens[i]),)).astype(np.int32),
                     max_new=args.max_new)
             for i in range(args.requests)]
     t0 = time.time()
     results = loop.run(reqs)
     dt = time.time() - t0
     total = sum(len(v) for v in results.values())
+    snap = {(r["name"],): r for r in loop.metrics.snapshot()}
+    ttft = snap.get(("serve.ttft_ms",), {})
+    dec = snap.get(("serve.decode_ms",), {})
+    occ = snap.get(("serve.batch_occupancy",), {})
     print(f"served {len(results)} requests, {total} tokens "
-          f"in {dt:.2f}s ({total/dt:.1f} tok/s)")
-    for uid, toks in sorted(results.items()):
-        print(f"  req {uid}: {toks}")
+          f"in {dt:.2f}s ({total/dt:.1f} tok/s); "
+          f"ttft p50={ttft.get('p50', 0):.0f}ms "
+          f"p99={ttft.get('p99', 0):.0f}ms; "
+          f"decode p50={dec.get('p50', 0):.1f}ms/tok "
+          f"p99={dec.get('p99', 0):.1f}ms/tok; "
+          f"occupancy mean={occ.get('mean', 0):.2f}")
+    for r in sorted(reqs, key=lambda r: r.uid):
+        print(f"  req {r.uid}: prompt={len(r.prompt)} "
+              f"ttft={r.ttft_ms:.0f}ms total={r.total_ms:.0f}ms "
+              f"toks={results[r.uid]}")
+    if args.metrics_json:
+        loop.metrics.save(args.metrics_json)
+        print(f"wrote metrics snapshot to {args.metrics_json}")
+    if args.trace:
+        n = get_tracer().save_jsonl(args.trace)
+        print(f"wrote {n} spans to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ import jax
 from ..bench.timing import TimingStats, time_callable   # noqa: F401  (re-export)
 from ..core import hardware
 from ..core.async_pipeline import Strategy, parse_strategy
+from ..obs.trace import get_tracer
 from ..kernels import ops
 from .registry import Measurement, Registry, TuningRecord
 from .search_space import Candidate, TuningTask, default_task
@@ -59,15 +60,23 @@ class Autotuner:
 
         args = task.make_args()
         measurements: List[Measurement] = []
-        for cand in survivors:
-            meas = self._measure(task, args, cand)
-            measurements.append(meas)
-            if verbose:
-                status = f"{meas.us_median:10.1f}us" if meas.error is None \
-                    else f"FAILED ({meas.error})"
-                print(f"  {_config_str(cand.config):<56s} "
-                      f"pred={meas.predicted_us:9.1f}us meas={status}",
-                      flush=True)
+        # the search becomes a span tree (tune -> one span per candidate),
+        # so a Perfetto view replays which configs were tried, in what
+        # order, at what cost, and which failed
+        with get_tracer().span(
+                f"tune:{task.kernel}",
+                shape="x".join(map(str, task.shape)), dtype=task.dtype,
+                chip=task.chip, interpret=task.interpret,
+                n_candidates=len(survivors), n_pruned=len(dropped)):
+            for cand in survivors:
+                meas = self._measure(task, args, cand)
+                measurements.append(meas)
+                if verbose:
+                    status = f"{meas.us_median:10.1f}us" \
+                        if meas.error is None else f"FAILED ({meas.error})"
+                    print(f"  {_config_str(cand.config):<56s} "
+                          f"pred={meas.predicted_us:9.1f}us meas={status}",
+                          flush=True)
 
         ok = [m for m in measurements if m.error is None]
         if not ok:
@@ -96,19 +105,27 @@ class Autotuner:
     def _measure(self, task: TuningTask, args: Tuple,
                  cand: Candidate) -> Measurement:
         cfg = _encode(cand.config)
-        try:
-            stats = time_callable(lambda: task.call(args, cand.config),
-                                  warmup=self.warmup, repeats=self.repeats)
-            return Measurement(config=cfg, us_median=stats.median,
-                               us_mean=stats.mean, us_min=stats.best,
-                               us_std=stats.std,
-                               n_trials=len(stats.times_us),
-                               n_outliers=stats.n_outliers,
-                               predicted_us=cand.predicted_us)
-        except Exception as e:          # candidate infeasible in practice
-            log.warning("candidate %s failed: %s", cfg, e)
-            return Measurement(config=cfg, predicted_us=cand.predicted_us,
-                               error=f"{type(e).__name__}: {e}")
+        with get_tracer().span("candidate", config=_config_str(cand.config),
+                               predicted_us=cand.predicted_us) as span:
+            try:
+                stats = time_callable(lambda: task.call(args, cand.config),
+                                      warmup=self.warmup,
+                                      repeats=self.repeats)
+                if span is not None:
+                    span.attrs["us_median"] = stats.median
+                return Measurement(config=cfg, us_median=stats.median,
+                                   us_mean=stats.mean, us_min=stats.best,
+                                   us_std=stats.std,
+                                   n_trials=len(stats.times_us),
+                                   n_outliers=stats.n_outliers,
+                                   predicted_us=cand.predicted_us)
+            except Exception as e:      # candidate infeasible in practice
+                log.warning("candidate %s failed: %s", cfg, e)
+                if span is not None:
+                    span.attrs["error"] = f"{type(e).__name__}"
+                return Measurement(config=cfg,
+                                   predicted_us=cand.predicted_us,
+                                   error=f"{type(e).__name__}: {e}")
 
 
 # ---------------------------------------------------------------------------

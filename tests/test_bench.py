@@ -5,6 +5,7 @@ import json
 import os
 import statistics
 import sys
+import time
 
 import jax.numpy as jnp
 import pytest
@@ -83,6 +84,113 @@ def test_autotuner_owns_no_timing_loop():
     assert autotuner.TimingStats is timing.TimingStats
     src = open(autotuner.__file__).read()
     assert "perf_counter" not in src
+
+
+def test_warmup_zero_compile_cost_is_outlier_rejected():
+    """warmup=0 lands the expensive first call in the timings — the IQR
+    rejection must flag it instead of silently poisoning the median."""
+    state = {"first": True}
+
+    def fn():
+        if state["first"]:
+            state["first"] = False
+            time.sleep(0.05)                # "compile" on first call
+        return jnp.zeros(())
+
+    stats = time_callable(fn, warmup=0, repeats=5)
+    assert stats.n_outliers >= 1
+    assert stats.median < 50_000            # the 50ms call didn't win
+
+
+def test_repeats_one_yields_single_trial():
+    stats = time_callable(lambda: jnp.zeros(()), warmup=0, repeats=1)
+    assert len(stats.times_us) == 1 and stats.n_outliers == 0
+    assert stats.median == stats.mean == stats.best == stats.times_us[0]
+    assert stats.std == 0.0
+
+
+def test_outlier_flags_edges():
+    from repro.bench.timing import outlier_flags
+    assert outlier_flags([], 3.0) == []
+    assert outlier_flags([1.0, 2.0, 3.0], 3.0) == [False] * 3   # < 4 kept
+    assert outlier_flags([1.0, 2.0, 3.0, 500.0], 0.0) == [False] * 4
+    flags = outlier_flags([10.0, 11.0, 12.0, 13.0, 500.0], 3.0)
+    assert flags == [False, False, False, False, True]
+    # order preserved: the outlier keeps its position
+    flags = outlier_flags([500.0, 10.0, 11.0, 12.0, 13.0], 3.0)
+    assert flags == [True, False, False, False, False]
+    # degenerate all-flagged case degrades to keep-all, never to empty
+    assert reject_outliers([9e9, 9e9, 9e9, 9e9], 3.0) == [9e9] * 4
+
+
+def test_time_callable_emits_trial_spans_under_open_span():
+    """Traced timing: one warmup + one timed span per trial, all nested
+    under whatever span the caller holds open, outlier-flagged."""
+    from repro.obs.trace import tracer
+    t = tracer()
+    t.clear()
+    t.enable()
+    try:
+        state = {"n": 0}
+
+        def fn():
+            state["n"] += 1
+            if state["n"] == 2:             # call 2 = timed trial 0 (call
+                #                             1 was the warmup): the outlier
+                time.sleep(0.05)
+            return jnp.zeros(())
+
+        with t.span("scenario:test") as outer:
+            stats = time_callable(fn, warmup=1, repeats=5)
+    finally:
+        t.disable()
+    spans = t.spans()
+    warm = [s for s in spans if s.name == "warmup"]
+    timed = [s for s in spans if s.name == "timed"]
+    assert len(warm) == 1 and len(timed) == 5
+    assert all(s.parent_id == outer.span_id for s in warm + timed)
+    assert [s.attrs["trial"] for s in timed] == list(range(5))
+    flagged = [s for s in timed if s.attrs["outlier"]]
+    assert len(flagged) == stats.n_outliers >= 1
+    assert flagged[0].attrs["trial"] == 0
+    # span durations are the real perf_counter readings, not re-measured
+    assert flagged[0].dur_us == pytest.approx(50_000, rel=0.5)
+    t.clear()
+
+
+def test_time_callable_disabled_tracing_adds_no_spans():
+    from repro.obs.trace import tracer
+    t = tracer()
+    t.clear()
+    assert not t.enabled
+    time_callable(lambda: jnp.zeros(()), warmup=1, repeats=2)
+    assert t.spans() == []
+
+
+def test_run_scenario_stamps_trace_id_when_traced(tmp_path):
+    from repro.obs.trace import tracer
+    sc = scenario_mod.get_scenario("smoke/stream")
+    opts = runner.RunOptions(warmup=0, repeats=1, check=False,
+                             registry=Registry(str(tmp_path / "reg.json")))
+    r = runner.run_scenario(sc, opts)
+    assert r.trace_id is None               # untraced rows carry no id
+    t = tracer()
+    t.clear()
+    t.enable()
+    try:
+        r = runner.run_scenario(sc, opts)
+    finally:
+        t.disable()
+    spans = {s.span_id: s for s in t.spans()}
+    assert r.trace_id in spans
+    scen = spans[r.trace_id]
+    assert scen.name == f"scenario:{sc.name}"
+    assert scen.attrs["config_source"] == "default"
+    assert scen.attrs["us_median"] == r.metrics["us_median"]
+    # the trial spans hang off the row's scenario span
+    timed = [s for s in t.spans() if s.name == "timed"]
+    assert timed and all(s.parent_id == r.trace_id for s in timed)
+    t.clear()
 
 
 # --- scenario registry ------------------------------------------------------
