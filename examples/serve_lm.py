@@ -1,5 +1,7 @@
-"""Batched serving example: prefill + lockstep decode over a request queue
-(the decode_32k / long_500k dry-run cells lower exactly this step function).
+"""Batched serving example: continuous batching over a paged KV cache
+(src/repro/serve/README.md) for a request queue — slots refill as requests
+finish; families without paged decode fall back to lockstep cohorts (the
+decode_32k / long_500k dry-run cells lower exactly that step function).
 
     PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b --requests 6
 """
@@ -44,8 +46,9 @@ def main():
     results = loop.run(reqs, temperature=args.temperature)
     dt = time.time() - t0
     total = sum(len(v) for v in results.values())
-    print(f"{cfg.name}: served {len(results)} requests / {total} tokens in "
-          f"{dt:.2f}s ({total / dt:.1f} tok/s on this host)")
+    print(f"{cfg.name}: [{loop.scheduler_kind}] served {len(results)} "
+          f"requests / {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s on this host)")
     for uid in sorted(results):
         print(f"  req {uid}: {results[uid]}")
 

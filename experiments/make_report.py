@@ -66,6 +66,27 @@ def bench_tables(pattern):
               f"(jax {report.jax_version or '?'}, "
               f"backend {report.backend or '?'}, {report.created_at})\n")
         measured = [r for r in report.results if r.kind == "measured"]
+        serving = [r for r in measured if r.kernel == "serve"]
+        measured = [r for r in measured if r.kernel != "serve"]
+        if serving:
+            print("| scenario | scheduler | batch | requests | tok/s "
+                  "| ttft p50/p99 (ms) | decode p50/p99 (ms) | occupancy "
+                  "| step us (median) |")
+            print("|---|---|---|---|---|---|---|---|---|")
+            for r in serving:
+                m = r.metrics
+                batch = r.shape[0] if r.shape else "—"
+                print(f"| {r.scenario} | {r.strategy} | {batch} "
+                      f"| {m.get('requests', 0):g} "
+                      f"| {m.get('tokens_per_s', 0):,.0f} "
+                      f"| {m.get('ttft_ms_p50', 0):,.0f} / "
+                      f"{m.get('ttft_ms_p99', 0):,.0f} "
+                      f"| {m.get('decode_ms_p50', 0):,.2f} / "
+                      f"{m.get('decode_ms_p99', 0):,.2f} "
+                      f"| {m.get('occupancy_mean', 0):.2f} "
+                      f"| {m.get('us_median', 0):,.1f} |")
+            if measured:
+                print()
         if measured:
             print("| scenario | chip | strategy | config | us (median) "
                   "| us (min) | max err | ok |")

@@ -201,7 +201,7 @@ def main(argv=None) -> int:
                             f"({[s.value for s in Strategy]})")
         p.add_argument("--tag", default=None,
                        help="scenario tag filter "
-                            "(smoke/fig3/fig4/paper/regime)")
+                            "(smoke/fig3/fig4/paper/regime/serve)")
         p.add_argument("--smoke", action="store_true",
                        help="only smoke-tagged scenarios")
 

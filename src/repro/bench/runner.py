@@ -117,6 +117,10 @@ def run_scenario(sc: Scenario, opts: Optional[RunOptions] = None, *,
     ``resolved`` short-circuits config resolution when the caller (sweep)
     already did it for this scenario."""
     opts = opts or RunOptions()
+    if sc.is_serving:
+        # end-to-end serving cell: no kernel config, oracle, or roofline
+        from .serving import run_serve_scenario
+        return run_serve_scenario(sc, opts)
     cfg, source, tuned_key = resolved or resolve_config(sc, opts)
     args = sc.make_args()
     fn = lambda: call_kernel(sc, args, cfg, opts.interpret)
@@ -177,6 +181,9 @@ def project_scenario(sc: Scenario, chip_name: str,
     """Roofline-model expectation row for ``sc`` on ``chip_name`` — the
     paper's cross-generation methodology where the hardware itself is not
     attached to this host."""
+    if sc.is_serving:
+        raise ValueError(f"serving scenario {sc.name!r} has no roofline "
+                         "projection")
     opts = opts or RunOptions()
     cfg, source, tuned_key = resolved or resolve_config(sc, opts)
     chip = hardware.get_chip(chip_name)
@@ -231,6 +238,10 @@ def sweep(scs: Optional[Sequence[Scenario]] = None,
     with get_tracer().span("sweep", n_scenarios=len(scs),
                            n_chips=len(chips)):
         for sc in scs:
+            if sc.is_serving:
+                # serving cells have no roofline model to project
+                report.add(run_scenario(sc, opts))
+                continue
             resolved = resolve_config(sc, opts)     # once per scenario
             report.add(run_scenario(sc, opts, resolved=resolved))
             for chip_name in chips:

@@ -37,9 +37,14 @@ from ..core.async_pipeline import Strategy
 from ..kernels import ops, ref
 from ..tuning.search_space import KERNELS, SPECS
 
-__all__ = ["Scenario", "register", "get_scenario", "scenarios",
-           "scenario_names", "call_kernel", "check_output", "CHECK_TOL",
-           "KERNELS"]
+__all__ = ["Scenario", "ServeScenario", "register", "get_scenario",
+           "scenarios", "scenario_names", "call_kernel", "check_output",
+           "CHECK_TOL", "KERNELS", "SERVE_KERNEL"]
+
+#: pseudo-kernel name marking end-to-end serving scenarios — they run the
+#: model serving loop (repro.bench.serving), not a Pallas kernel, so they
+#: bypass SPECS/CALLERS/roofline projection entirely.
+SERVE_KERNEL = "serve"
 
 
 @dataclass(frozen=True)
@@ -66,6 +71,10 @@ class Scenario:
     def make_args(self) -> Tuple:
         return SPECS[self.kernel].make_args(self.shape, self.dtype)
 
+    @property
+    def is_serving(self) -> bool:
+        return self.kernel == SERVE_KERNEL
+
     def matches(self, *, only: Optional[str] = None,
                 kernel: Optional[str] = None,
                 strategy: Optional[Strategy] = None,
@@ -82,6 +91,31 @@ class Scenario:
         if smoke is not None and self.smoke != smoke:
             return False
         return True
+
+
+@dataclass(frozen=True)
+class ServeScenario(Scenario):
+    """An end-to-end serving workload: scheduler x arrival trace.
+
+    ``workload`` carries the trace/scheduler parameters consumed by
+    ``repro.bench.serving.run_serve_scenario``: scheduler ("continuous" |
+    "cohort"), arrival ("uniform" | "poisson" | "bursty"), n_requests,
+    batch, rate, burst, prompt_lens [lo, hi], max_new [lo, hi], seed,
+    block_len, arch.  ``shape`` is (batch, n_requests) for display."""
+    kernel: str = SERVE_KERNEL
+    shape: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        # no SPECS entry: serving scenarios are not kernel cells
+        if self.kernel != SERVE_KERNEL:
+            raise ValueError(f"ServeScenario.kernel must be "
+                             f"{SERVE_KERNEL!r}, got {self.kernel!r}")
+        object.__setattr__(self, "shape",
+                           tuple(int(s) for s in self.shape))
+
+    def make_args(self):
+        raise TypeError("serving scenarios have no kernel args; run them "
+                        "via repro.bench.serving.run_serve_scenario")
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +287,30 @@ def _register_defaults() -> None:
                 name=f"fig4/{kernel}/{strategy.value}", kernel=kernel,
                 shape=shape, strategy=strategy, workload=dict(workload),
                 tags=("fig4", "paper"), section="fig4"))
+
+    # serving: continuous batching vs the static-cohort baseline under
+    # three deterministic arrival traces.  uniform is the small CI-gated
+    # cell; poisson is the acceptance workload (mixed lengths at batch 4,
+    # where slot-level refill shows its tokens/s win); bursty stresses
+    # admission + queueing.  Not smoke-tagged: the serving CI step runs
+    # them explicitly so the kernel trajectory sweep stays fast.
+    serve_traces = {
+        "uniform": dict(n_requests=6, batch=2, rate=0.5,
+                        prompt_lens=[5, 16], max_new=[4, 8]),
+        "poisson": dict(n_requests=16, batch=4, rate=0.5,
+                        prompt_lens=[5, 24], max_new=[8, 40]),
+        "bursty": dict(n_requests=8, batch=2, rate=0.5, burst=4,
+                       prompt_lens=[5, 16], max_new=[4, 12]),
+    }
+    for arrival, wl in serve_traces.items():
+        for sched in ("continuous", "cohort"):
+            register(ServeScenario(
+                name=f"serve/{arrival}/{sched}",
+                shape=(wl["batch"], wl["n_requests"]),
+                workload={"scheduler": sched, "arrival": arrival,
+                          "seed": 0, "block_len": 8,
+                          "arch": "qwen2-1.5b", **wl},
+                tags=("serve",), section="serve"))
 
 
 _register_defaults()

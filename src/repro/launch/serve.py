@@ -1,22 +1,15 @@
-"""Serving driver: prefill + decode with continuous batched requests.
+"""Serving driver: continuous batching over a paged KV cache.
 
-``build_serve_fns`` returns jitted (prefill, decode_step) closures; the
-``ServingLoop`` packs requests into a fixed batch, prefills new sequences,
-and steps the whole batch one token at a time — the standard static-batch
-TPU serving shape (decode_32k / long_500k lower exactly this step).
+The scheduling and cache machinery lives in ``repro.serve``; this module
+is the launch-layer entry point.  ``ServingLoop`` picks a scheduler —
+slot-level continuous batching (:class:`repro.serve.ContinuousScheduler`)
+by default, falling back to the static-cohort loop for model families
+without a paged decode path — and the CLI replays deterministic arrival
+traces (uniform / poisson / bursty, fixed seeds) against it.
 
-Ragged prompts are LEFT-padded to the batch max and the pad slots are
-masked out of the KV cache (``kpos = -1``, which ``attend_decode`` already
-treats as "empty"), so a mixed-length batch decodes over real tokens only.
-Left padding keeps every sequence's last prompt token in the final
-position (the one ``prefill`` samples from), and the uniform position
-shift it introduces is invariant under RoPE's relative-position attention;
-only prefill-time attention still sees the pad keys, which is the standard
-static-batch approximation.
-
-Every request is measured (``repro.obs.metrics``): time-to-first-token,
-per-token decode latency, batch occupancy, and queue depth — the metrics
-the ROADMAP's latency-SLO / tokens-per-second serving scenarios gate on.
+The legacy helpers (``Request``, ``sample``, ``pack_prompts``,
+``mask_padded_cache``, ``build_serve_fns``) are re-exported from
+``repro.serve`` so existing imports keep working.
 
 Run as a script it serves a reduced model locally:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --requests 4
@@ -26,181 +19,69 @@ from __future__ import annotations
 import argparse
 import logging
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.config import ArchConfig
-from ..distributed import sharding as shd
 from ..models import build_model
 from ..obs import metrics as obs_metrics
 from ..obs.trace import get_tracer
+from ..serve import (ARRIVALS, CohortScheduler, ContinuousScheduler,
+                     Request, build_serve_fns, make_trace,
+                     mask_padded_cache, pack_prompts, sample)
+
+__all__ = ["Request", "ServingLoop", "build_serve_fns", "main",
+           "mask_padded_cache", "pack_prompts", "sample"]
 
 log = logging.getLogger("repro.serve")
 
 
-def build_serve_fns(model, rules=None, budget=None):
-    def prefill(params, batch):
-        with shd.use_rules(rules):
-            return model.prefill(params, batch, budget=budget)
-
-    def decode_step(params, state, tokens):
-        with shd.use_rules(rules):
-            return model.decode_step(params, state, tokens)
-
-    return jax.jit(prefill), jax.jit(decode_step, donate_argnums=(1,))
-
-
-def sample(logits, key, temperature: float = 0.0):
-    if temperature <= 0:
-        return jnp.argmax(logits, axis=-1)
-    return jax.random.categorical(key, logits / temperature, axis=-1)
-
-
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray
-    max_new: int
-    out_tokens: List[int] = field(default_factory=list)
-    done: bool = False
-    # filled in by the loop ---------------------------------------------------
-    ttft_ms: Optional[float] = None     # submission -> first token (incl.
-    #                                     queue wait)
-    total_ms: Optional[float] = None    # submission -> request finished
-
-
-def pack_prompts(active: List[Request], batch: int):
-    """LEFT-pad ragged prompts into one (batch, max_len) int32 array.
-    Returns (tokens, pads) where ``pads[i]`` is request i's pad count."""
-    max_len = max(len(r.prompt) for r in active)
-    tokens = np.zeros((batch, max_len), np.int32)
-    pads = np.zeros((batch,), np.int32)
-    for i, r in enumerate(active):
-        p = np.asarray(r.prompt, np.int32).reshape(-1)
-        pads[i] = max_len - len(p)
-        tokens[i, pads[i]:] = p
-    return tokens, pads
-
-
-def mask_padded_cache(state, pads: np.ndarray):
-    """Rewrite the pad slots' cached positions to -1 so ``attend_decode``
-    (which masks ``pos_cache < 0`` as empty) never attends them."""
-    kpos = getattr(state, "kpos", None)
-    if kpos is None or not np.any(pads):
-        return state
-    slot = jnp.arange(kpos.shape[-1], dtype=jnp.int32)
-    pad_col = jnp.asarray(pads, jnp.int32)[None, :, None]
-    masked = jnp.where(slot[None, None, :] < pad_col, -1, kpos)
-    return state._replace(kpos=masked)
-
-
 class ServingLoop:
-    """Static-batch continuous serving: all sequences decode in lockstep;
-    finished slots are refilled from the queue at the next prefill.
+    """Launch-layer serving facade.
 
-    ``metrics`` is a ``repro.obs.metrics.Registry`` (a private one by
-    default, so concurrent loops and tests never share counters):
+    ``scheduler="continuous"`` (the default) runs slot-level continuous
+    batching over a paged KV arena; ``scheduler="cohort"`` runs the
+    legacy static-cohort loop.  Families without a paged decode path
+    (ssm / hybrid / encdec) fall back to cohort automatically.
 
-      serve.ttft_ms           histogram, per request
-      serve.decode_ms         histogram, per decode step (per-token latency)
-      serve.batch_occupancy   histogram, active/batch per prefill
-      serve.queue_depth       gauge, requests still queued
-      serve.requests_total    counter
-      serve.tokens_total      counter
-    """
+    The scheduler's ``repro.obs.metrics.Registry`` is exposed as
+    ``self.metrics`` (a private registry by default, so concurrent loops
+    and tests never share counters)."""
 
     def __init__(self, cfg: ArchConfig, params, *, batch: int,
                  rules=None, seed: int = 0, max_new: int = 64,
-                 metrics: Optional[obs_metrics.Registry] = None):
+                 metrics: Optional[obs_metrics.Registry] = None,
+                 scheduler: str = "continuous", block_len: int = 16,
+                 max_seq: int = 1024, total_tokens: Optional[int] = None):
+        if scheduler not in ("continuous", "cohort"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
+        if scheduler == "continuous" and build_model(cfg).decode_paged is None:
+            log.info("family %s has no paged decode path; falling back to "
+                     "cohort scheduling", cfg.family)
+            scheduler = "cohort"
+        if scheduler == "continuous":
+            self.scheduler = ContinuousScheduler(
+                cfg, params, batch=batch, rules=rules, seed=seed,
+                max_new=max_new, metrics=metrics, block_len=block_len,
+                max_seq=max_seq, total_tokens=total_tokens)
+        else:
+            self.scheduler = CohortScheduler(
+                cfg, params, batch=batch, rules=rules, seed=seed,
+                max_new=max_new, metrics=metrics)
         self.cfg = cfg
-        self.params = params
         self.batch = batch
-        self.model = build_model(cfg)
-        self.max_new = max_new
-        self._fns = {}          # prefill budget -> (prefill, decode)
-        self.rules = rules
-        self.key = jax.random.PRNGKey(seed)
-        self.metrics = metrics if metrics is not None \
-            else obs_metrics.Registry()
+        self.scheduler_kind = scheduler
 
-    def _get_fns(self, prompt_len: int):
-        budget = prompt_len + self.max_new + 1
-        if budget not in self._fns:
-            self._fns[budget] = build_serve_fns(self.model, self.rules,
-                                                budget=budget)
-        return self._fns[budget]
+    @property
+    def metrics(self) -> obs_metrics.Registry:
+        return self.scheduler.metrics
 
     def run(self, requests: List[Request], temperature: float = 0.0,
             max_steps: int = 64) -> Dict[int, List[int]]:
-        tracer = get_tracer()
-        m = self.metrics
-        ttft_h = m.histogram("serve.ttft_ms")
-        dec_h = m.histogram("serve.decode_ms")
-        occ_h = m.histogram("serve.batch_occupancy")
-        qdepth = m.gauge("serve.queue_depth")
-        req_c = m.counter("serve.requests_total")
-        tok_c = m.counter("serve.tokens_total")
-
-        t_submit = time.perf_counter()  # all requests enqueue at run start
-        queue = list(requests)
-        results: Dict[int, List[int]] = {}
-        while queue:
-            active = queue[:self.batch]
-            queue = queue[self.batch:]
-            qdepth.set(len(queue))
-            occ_h.observe(len(active) / self.batch)
-            with tracer.span("serve.batch", n_active=len(active),
-                             queued=len(queue)):
-                prompts, pads = pack_prompts(active, self.batch)
-                prefill_fn, decode_fn = self._get_fns(prompts.shape[1])
-                batch = {"tokens": jnp.asarray(prompts)}
-                if self.cfg.is_encdec:
-                    batch["frames"] = jnp.zeros(
-                        (self.batch, prompts.shape[1], self.cfg.d_model),
-                        jnp.float32)
-                if self.cfg.n_patches:
-                    batch["patches"] = jnp.zeros(
-                        (self.batch, self.cfg.n_patches, self.cfg.d_model),
-                        jnp.float32)
-                with tracer.span("serve.prefill",
-                                 prompt_len=int(prompts.shape[1])):
-                    logits, state = prefill_fn(self.params, batch)
-                    state = mask_padded_cache(state, pads)
-                    toks = sample(logits, self.key, temperature)[:, None]
-                    toks = jax.block_until_ready(toks)
-                t_first = time.perf_counter()
-                for r in active:
-                    r.ttft_ms = (t_first - t_submit) * 1e3
-                    ttft_h.observe(r.ttft_ms)
-                for step in range(max_steps):
-                    for i, r in enumerate(active):
-                        if not r.done and len(r.out_tokens) < r.max_new:
-                            r.out_tokens.append(int(toks[i, 0]))
-                        elif not r.done:
-                            r.done = True
-                    if all(r.done or len(r.out_tokens) >= r.max_new
-                           for r in active):
-                        break
-                    self.key, sub = jax.random.split(self.key)
-                    t0 = time.perf_counter()
-                    with tracer.span("serve.decode_step", step=step):
-                        logits, state = decode_fn(self.params, state,
-                                                  toks.astype(jnp.int32))
-                        toks = sample(logits, sub, temperature)[:, None]
-                        toks = jax.block_until_ready(toks)
-                    dec_h.observe((time.perf_counter() - t0) * 1e3)
-                t_done = time.perf_counter()
-                for r in active:
-                    r.total_ms = (t_done - t_submit) * 1e3
-                    results[r.uid] = r.out_tokens
-                    req_c.inc()
-                    tok_c.inc(len(r.out_tokens))
-        qdepth.set(0)
-        return results
+        return self.scheduler.run(requests, temperature=temperature,
+                                  max_steps=max_steps)
 
 
 def main(argv=None):
@@ -211,8 +92,25 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--ragged", action="store_true",
                     help="draw each prompt's length from [4, prompt-len] "
-                         "to exercise the left-pad + mask path")
+                         "to exercise the ragged/mixed-length path")
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "cohort"],
+                    help="slot-level continuous batching (default) or the "
+                         "legacy static-cohort loop")
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="paged KV cache block length (continuous only)")
+    ap.add_argument("--arrival", default="none",
+                    choices=["none"] + list(ARRIVALS),
+                    help="arrival trace: 'none' submits every request at "
+                         "t=0; otherwise a deterministic virtual-step "
+                         "trace at --rate requests/step")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="arrival rate in requests per virtual step")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="burst size for --arrival bursty")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for prompts, arrivals and sampling")
     ap.add_argument("--tuning-registry", default=None,
                     help="autotuning registry JSON (default "
                          "./tuning_registry.json)")
@@ -233,32 +131,42 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
-    loop = ServingLoop(cfg, params, batch=args.batch, max_new=args.max_new)
-    rng = np.random.default_rng(0)
-    lens = (rng.integers(4, args.prompt_len + 1, args.requests)
-            if args.ragged else [args.prompt_len] * args.requests)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab,
-                                        (int(lens[i]),)).astype(np.int32),
-                    max_new=args.max_new)
-            for i in range(args.requests)]
+    loop = ServingLoop(cfg, params, batch=args.batch, max_new=args.max_new,
+                       seed=args.seed, scheduler=args.scheduler,
+                       block_len=args.block_len,
+                       max_seq=args.prompt_len + args.max_new + args.block_len)
+    if args.arrival == "none":
+        rng = np.random.default_rng(args.seed)
+        lens = (rng.integers(4, args.prompt_len + 1, args.requests)
+                if args.ragged else [args.prompt_len] * args.requests)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab,
+                                            (int(lens[i]),)).astype(np.int32),
+                        max_new=args.max_new)
+                for i in range(args.requests)]
+    else:
+        lo = 4 if args.ragged else args.prompt_len
+        reqs = make_trace(args.arrival, args.requests, vocab=cfg.vocab,
+                          rate=args.rate, burst=args.burst, seed=args.seed,
+                          prompt_lens=(lo, args.prompt_len),
+                          max_new=(args.max_new, args.max_new))
     t0 = time.time()
-    results = loop.run(reqs)
+    results = loop.run(reqs, max_steps=args.max_new)
     dt = time.time() - t0
     total = sum(len(v) for v in results.values())
     snap = {(r["name"],): r for r in loop.metrics.snapshot()}
     ttft = snap.get(("serve.ttft_ms",), {})
     dec = snap.get(("serve.decode_ms",), {})
     occ = snap.get(("serve.batch_occupancy",), {})
-    print(f"served {len(results)} requests, {total} tokens "
-          f"in {dt:.2f}s ({total/dt:.1f} tok/s); "
+    print(f"[{loop.scheduler_kind}] served {len(results)} requests, "
+          f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s); "
           f"ttft p50={ttft.get('p50', 0):.0f}ms "
           f"p99={ttft.get('p99', 0):.0f}ms; "
           f"decode p50={dec.get('p50', 0):.1f}ms/tok "
           f"p99={dec.get('p99', 0):.1f}ms/tok; "
           f"occupancy mean={occ.get('mean', 0):.2f}")
     for r in sorted(reqs, key=lambda r: r.uid):
-        print(f"  req {r.uid}: prompt={len(r.prompt)} "
+        print(f"  req {r.uid}: prompt={len(r.prompt)} arrival={r.arrival:.1f} "
               f"ttft={r.ttft_ms:.0f}ms total={r.total_ms:.0f}ms "
               f"toks={results[r.uid]}")
     if args.metrics_json:

@@ -122,6 +122,60 @@ def update_cache_layer(k_layer, v_layer, pos_layer, k_new, v_new, positions):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (serving): block arena + per-slot block tables
+# ---------------------------------------------------------------------------
+#
+# The serving arena carves one fixed (n_blocks, block_len, KV, hd) region per
+# layer out of a global token budget; each batch slot owns an ordered list of
+# block ids (its *block table*).  Because a slot fills its blocks strictly in
+# order, gathering the table reconstructs a dense (W, KV, hd) view in which
+# row p holds the slot's token at position p — so ``attend_decode`` (and its
+# ``pos < 0`` empty-slot masking, the same path ragged cohort serving uses)
+# works unchanged on the gathered view.  Block id 0 is a scratch block:
+# inactive slots' writes land there and table entries < 0 gather it with
+# their positions forced to -1, so garbage is never attended.
+
+
+def gather_paged_view(k_blocks, v_blocks, pos_blocks, block_table):
+    """Reassemble per-slot dense cache views from a block arena.
+
+    k/v_blocks: (n_blocks, BL, KV, hd); pos_blocks: (n_blocks, BL);
+    block_table: (B, MB) int32 with -1 marking unused entries.  Returns
+    (k, v, pos) shaped (B, MB*BL, KV, hd) / (B, MB*BL); unused entries'
+    positions are -1 so ``attend_decode`` masks them."""
+    bt = jnp.maximum(block_table, 0)
+    b, mb = block_table.shape
+    bl = pos_blocks.shape[1]
+    k = k_blocks[bt]                                     # (B, MB, BL, KV, hd)
+    v = v_blocks[bt]
+    pos = jnp.where((block_table >= 0)[:, :, None], pos_blocks[bt], -1)
+    kv, hd = k.shape[-2:]
+    return (k.reshape(b, mb * bl, kv, hd), v.reshape(b, mb * bl, kv, hd),
+            pos.reshape(b, mb * bl))
+
+
+def append_paged_layer(k_blocks, v_blocks, k_new, v_new, blk, off):
+    """Write each slot's one new KV row into its current block.
+
+    k/v_new: (B, 1, KV, hd); blk/off: (B,) target block id and row within
+    it (inactive slots point at the scratch block 0)."""
+    k_blocks = k_blocks.at[blk, off].set(k_new[:, 0])
+    v_blocks = v_blocks.at[blk, off].set(v_new[:, 0])
+    return k_blocks, v_blocks
+
+
+def attend_paged(q, k_blocks, v_blocks, pos_blocks, block_table, idx_map, *,
+                 q_position, window: int = 0,
+                 scale: Optional[float] = None, global_flag=None):
+    """Decode attention over a block arena: gather the slot's block table
+    into a dense view, then run the standard masked decode attention."""
+    k, v, pos = gather_paged_view(k_blocks, v_blocks, pos_blocks,
+                                  block_table)
+    return attend_decode(q, k, v, pos, idx_map, q_position=q_position,
+                         window=window, scale=scale, global_flag=global_flag)
+
+
+# ---------------------------------------------------------------------------
 # Chunked online-softmax attention (train / prefill)
 # ---------------------------------------------------------------------------
 

@@ -47,6 +47,10 @@ class Model:
     prefill: Callable
     decode_step: Callable
     forward: Callable
+    # paged decode over a block-arena KV cache (repro.serve continuous
+    # batching); None for families whose decode state a block arena
+    # cannot hold (ssm/hybrid/encdec)
+    decode_paged: Optional[Callable] = None
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -91,5 +95,14 @@ def build_model(cfg: ArchConfig) -> Model:
             params, cfg, tokens, mode="decode", state=state)
         return logits[:, -1], state
 
+    decode_paged = None
+    if cfg.family in tfm.PAGED_FAMILIES:
+        def decode_paged(params, paged, tokens, block_table, slot_pos):
+            """tokens: (B, 1); block_table: (B, MB); slot_pos: (B,) ->
+            (logits (B, vocab_p), new PagedState)."""
+            return tfm.forward_paged_decode(params, cfg, tokens, paged,
+                                            block_table, slot_pos)
+
     return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
-                 decode_step=decode_step, forward=forward)
+                 decode_step=decode_step, forward=forward,
+                 decode_paged=decode_paged)

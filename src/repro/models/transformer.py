@@ -197,6 +197,28 @@ def _attn_block(p, x, cfg, positions, mode, cache, global_flag, cdt):
     return out, new_cache
 
 
+def _ffn_residual(p, x, h, attn_out, cfg: ArchConfig, cdt):
+    """Residual + FFN tail shared by every attention family (dense / moe /
+    vlm), in both the dense-cache and paged decode paths.  ``h`` is the
+    pre-attention normed input (reused by parallel-residual archs)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_residual:
+        if cfg.moe.enabled:
+            ff, aux = moe_mod.moe_apply(p["moe"], h, cfg, cdt)
+        else:
+            ff = mlp(p["mlp"], h, cfg.act, cdt)
+        x = x + attn_out + ff
+    else:
+        x = x + attn_out
+        h2 = norm(p["ln_mlp"], x)
+        if cfg.moe.enabled:
+            ff, aux = moe_mod.moe_apply(p["moe"], h2, cfg, cdt)
+        else:
+            ff = mlp(p["mlp"], h2, cfg.act, cdt)
+        x = x + ff
+    return logical(x, "batch", "seq", "residual"), aux
+
+
 def make_layer_fn(cfg: ArchConfig, mode: str):
     cdt = jnp.dtype(cfg.dtype)
 
@@ -237,21 +259,7 @@ def make_layer_fn(cfg: ArchConfig, mode: str):
             x = x + mlp(p["mlp"], h2, cfg.act, cdt)
             return x, (new_cache, aux)
 
-        if cfg.parallel_residual:
-            if cfg.moe.enabled:
-                ff, aux = moe_mod.moe_apply(p["moe"], h, cfg, cdt)
-            else:
-                ff = mlp(p["mlp"], h, cfg.act, cdt)
-            x = x + attn_out + ff
-        else:
-            x = x + attn_out
-            h2 = norm(p["ln_mlp"], x)
-            if cfg.moe.enabled:
-                ff, aux = moe_mod.moe_apply(p["moe"], h2, cfg, cdt)
-            else:
-                ff = mlp(p["mlp"], h2, cfg.act, cdt)
-            x = x + ff
-        x = logical(x, "batch", "seq", "residual")
+        x, aux = _ffn_residual(p, x, h, attn_out, cfg, cdt)
         return x, (new_cache, aux)
 
     return layer
@@ -537,3 +545,92 @@ def forward(params, cfg: ArchConfig, tokens, *, patches=None,
             scan_body, x, (params["layers"], cache, flags))
     logits = unembed(params, cfg, x)
     return logits, None, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (continuous batching over a block-arena KV cache)
+# ---------------------------------------------------------------------------
+
+#: families the paged decode path supports (attention-only decode state; the
+#: recurrent families carry extra per-layer state a block arena doesn't hold)
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+class PagedState(NamedTuple):
+    """Block-arena KV cache shared by all batch slots.  ``k``/``v``:
+    (L, n_blocks, block_len, KV, hd); ``pos``: (n_blocks, block_len)
+    absolute position of each row (-1 = empty).  Positions are identical
+    across layers, so one plane serves the whole stack.  Block 0 is the
+    scratch block inactive slots write into (see models.attention)."""
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+
+def init_paged_state(cfg: ArchConfig, n_blocks: int, block_len: int,
+                     dtype=None) -> PagedState:
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged decode supports families {PAGED_FAMILIES}, "
+            f"not {cfg.family!r}")
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    shape = (cfg.n_layers, n_blocks, block_len, cfg.n_kv_heads, cfg.head_dim_)
+    return PagedState(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                      pos=jnp.full((n_blocks, block_len), -1, jnp.int32))
+
+
+def forward_paged_decode(params, cfg: ArchConfig, tokens, paged: PagedState,
+                         block_table, slot_pos):
+    """One decode step for ``B`` independent slots over the block arena.
+
+    tokens: (B, 1) int32 (each slot's previous token); block_table: (B, MB)
+    int32 block ids, -1 = unused; slot_pos: (B,) each slot's next absolute
+    position.  Unlike the dense-cache decode, slots need NOT share a
+    position — each writes at its own (block, row) and attends only rows
+    whose gathered position is in [0, its own position].  Returns
+    (last-token logits, new PagedState)."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged decode supports families {PAGED_FAMILIES}, "
+            f"not {cfg.family!r}")
+    cdt = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    bl = paged.pos.shape[1]
+    positions = slot_pos[:, None]                       # (B, 1)
+    x = _embed_inputs(params, cfg, tokens, None, positions, cdt)
+
+    # this step's write target per slot; inactive slots (table entry -1)
+    # clamp to the scratch block 0, whose rows are never attended
+    blk = jnp.take_along_axis(block_table,
+                              (slot_pos // bl)[:, None], axis=1)[:, 0]
+    blk = jnp.maximum(blk, 0)
+    off = slot_pos % bl
+    pos_blocks = paged.pos.at[blk, off].set(slot_pos)
+
+    hp = padded_heads(cfg)
+    idx_map = attn.kv_index_map(cfg.n_heads, cfg.n_kv_heads, hp)
+    L = cfg.n_layers
+
+    def body(carry, per):
+        x, K, V = carry
+        p_l, i = per
+        k_l = jax.lax.dynamic_index_in_dim(K, i, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(V, i, 0, keepdims=False)
+        h = norm(p_l["ln_attn"], x)
+        q, k_new, v_new = attn.qkv_project(p_l["attn"], h, cfg, positions,
+                                           cdt)
+        k_l, v_l = attn.append_paged_layer(k_l, v_l, k_new, v_new, blk, off)
+        out_h = attn.attend_paged(
+            q, k_l, v_l, pos_blocks, block_table, idx_map,
+            q_position=slot_pos, window=cfg.attn.window)
+        attn_o = attn.attn_out(p_l["attn"], out_h, cfg, cdt)
+        x, aux = _ffn_residual(p_l, x, h, attn_o, cfg, cdt)
+        K = jax.lax.dynamic_update_index_in_dim(K, k_l, i, 0)
+        V = jax.lax.dynamic_update_index_in_dim(V, v_l, i, 0)
+        return (x, K, V), aux
+
+    (x, K, V), _ = jax.lax.scan(
+        body, (x, paged.k, paged.v),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    logits = unembed(params, cfg, x)
+    return logits[:, -1], PagedState(k=K, v=V, pos=pos_blocks)

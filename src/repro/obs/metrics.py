@@ -128,6 +128,12 @@ class Histogram(_Metric):
     def count(self) -> int:
         return self._count
 
+    def samples(self) -> List[float]:
+        """Copy of the retained sample window, in observation order (the
+        bench serving rows export these as raw ``times_us``)."""
+        with self._lock:
+            return list(self._samples)
+
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             samples = sorted(self._samples)

@@ -1,0 +1,19 @@
+"""Continuous-batching serving subsystem: paged KV cache + schedulers.
+
+See ``src/repro/serve/README.md`` for the architecture.  The launch-layer
+entry point (CLI + ``ServingLoop`` wrapper) lives in
+``repro.launch.serve``; the bench scenario family in
+``repro.bench.serving``.
+"""
+from .cache import PagedKVCache, next_pow2
+from .scheduler import (CohortScheduler, ContinuousScheduler, Request,
+                        build_serve_fns, mask_padded_cache, pack_prompts,
+                        sample)
+from .traces import ARRIVALS, make_trace
+
+__all__ = [
+    "PagedKVCache", "next_pow2",
+    "CohortScheduler", "ContinuousScheduler", "Request",
+    "build_serve_fns", "mask_padded_cache", "pack_prompts", "sample",
+    "ARRIVALS", "make_trace",
+]

@@ -1,0 +1,216 @@
+"""Paged KV cache: one fixed block arena + per-slot block tables.
+
+The arena carves ``n_blocks`` blocks of ``block_len`` token rows per layer
+out of a single global token budget (``models.transformer.PagedState``), so
+serving never re-allocates a cache per prompt-length bucket.  Each batch
+slot owns an ordered *block table*; because a slot fills its blocks
+strictly in order, the gathered table is a dense per-slot cache view in
+which row ``p`` holds position ``p`` — ``attend_decode``'s ``pos == -1``
+masking (the same path ragged cohort serving uses) does the rest.
+
+This module is the HOST side: a free-list allocator with
+``alloc / append / free`` lifecycle plus admission accounting.  A request
+admitted with ``admit()`` reserves its full lifetime block count up front
+(prefill blocks are allocated immediately, decode blocks lazily as the
+sequence crosses block boundaries), so a mid-decode allocation can never
+deadlock the arena: if the blocks aren't guaranteed, admission refuses.
+
+Block id 0 is a scratch block: inactive slots' decode writes land there
+and unused table entries gather it with positions forced to -1, so stale
+rows are never attended.  Freed blocks get their position rows cleared on
+``free_slot`` for the same reason.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.config import ArchConfig
+from ..models import transformer as tfm
+
+__all__ = ["PagedKVCache", "next_pow2", "scatter_prefill"]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _clear_pos(pos, ids):
+    """Mark freed blocks' rows empty (ids padded with 0 = scratch block)."""
+    return pos.at[ids].set(-1)
+
+
+def scatter_prefill(paged: tfm.PagedState, k_dense, v_dense, pos_dense, ids
+                    ) -> tfm.PagedState:
+    """Scatter one request's dense prefill cache into its arena blocks.
+
+    Pure (traceable) so schedulers can fuse it with the prefill forward
+    into one jitted dispatch.  k/v_dense: (L, 1, bucket, KV, hd);
+    pos_dense: (bucket,) with pad rows already -1; ids: (nb,) target
+    block ids, nb * block_len == bucket."""
+    L, _, bucket, kv, hd = k_dense.shape
+    nb = ids.shape[0]
+    bl = bucket // nb
+    k = k_dense[:, 0].reshape(L, nb, bl, kv, hd)
+    v = v_dense[:, 0].reshape(L, nb, bl, kv, hd)
+    pos = pos_dense.reshape(nb, bl)
+    return tfm.PagedState(k=paged.k.at[:, ids].set(k),
+                          v=paged.v.at[:, ids].set(v),
+                          pos=paged.pos.at[ids].set(pos))
+
+
+class PagedKVCache:
+    """Block-arena KV cache for ``batch`` slots under one token budget.
+
+    ``total_tokens`` is the global arena budget (rounded up to whole
+    blocks); ``max_seq`` bounds any single slot's length and sizes the
+    block table width.  The device arena lives in ``self.state``
+    (a ``models.transformer.PagedState``)."""
+
+    def __init__(self, cfg: ArchConfig, batch: int, *, total_tokens: int,
+                 max_seq: int, block_len: int = 16, dtype=None):
+        if block_len < 1:
+            raise ValueError("block_len must be >= 1")
+        self.cfg = cfg
+        self.batch = batch
+        self.block_len = block_len
+        self.max_blocks_per_slot = max(
+            1, math.ceil(max_seq / block_len))
+        self.max_seq = self.max_blocks_per_slot * block_len
+        # +1: block 0 is the reserved scratch block, never allocated
+        self.n_blocks = 1 + max(self.blocks_for(total_tokens),
+                                self.max_blocks_per_slot)
+        self.state = tfm.init_paged_state(cfg, self.n_blocks, block_len,
+                                          dtype=dtype)
+        # LIFO free list: a just-freed block is re-used first
+        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        self.tables = np.full((batch, self.max_blocks_per_slot), -1,
+                              np.int32)
+        self._slot_blocks: List[List[int]] = [[] for _ in range(batch)]
+        # blocks promised to admitted slots but not yet allocated
+        self._slot_reserved = np.zeros((batch,), np.int64)
+        self._write_fns = {}            # n_prefill_blocks -> jitted scatter
+        # device copy of self.tables, re-uploaded only when tables change
+        # (most decode steps allocate nothing, so the upload is elided)
+        self._dev_tables: Optional[jax.Array] = None
+
+    # -- accounting ---------------------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return math.ceil(max(int(n_tokens), 0) / self.block_len)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def reserved_blocks(self) -> int:
+        return int(self._slot_reserved.sum())
+
+    @property
+    def used_blocks(self) -> int:
+        return sum(len(b) for b in self._slot_blocks)
+
+    def can_admit(self, lifetime_tokens: int) -> bool:
+        """Fit-by-free-blocks admission: the request's whole lifetime
+        (prefill + planned decode) must fit in unreserved free blocks."""
+        need = self.blocks_for(lifetime_tokens)
+        return (need <= self.free_blocks - self.reserved_blocks
+                and need <= self.max_blocks_per_slot)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"arena exhausted: need {n} blocks, {len(self._free)} free "
+                f"(admission accounting bug)")
+        return [self._free.pop() for _ in range(n)]
+
+    def admit(self, slot: int, prefill_tokens: int,
+              lifetime_tokens: int) -> List[int]:
+        """Reserve ``lifetime_tokens`` worth of blocks for ``slot`` and
+        allocate the prefill prefix now.  Returns the prefill block ids."""
+        if self._slot_blocks[slot] or self._slot_reserved[slot]:
+            raise RuntimeError(f"slot {slot} already admitted")
+        if not self.can_admit(lifetime_tokens):
+            raise RuntimeError(f"slot {slot}: admission check not honored")
+        n_now = self.blocks_for(prefill_tokens)
+        total = max(self.blocks_for(lifetime_tokens), n_now)
+        ids = self._alloc(n_now)
+        self._slot_blocks[slot] = list(ids)
+        self.tables[slot, :n_now] = ids
+        self._dev_tables = None
+        self._slot_reserved[slot] = total - n_now
+        return ids
+
+    def append(self, slot: int, pos: int) -> None:
+        """Ensure the block holding row ``pos`` exists before a decode
+        write — allocates the slot's next block (from its reservation)
+        when ``pos`` crosses a block boundary."""
+        j = pos // self.block_len
+        if j < len(self._slot_blocks[slot]):
+            return
+        if j != len(self._slot_blocks[slot]) or j >= self.max_blocks_per_slot:
+            raise RuntimeError(
+                f"slot {slot}: non-contiguous append at pos {pos}")
+        if self._slot_reserved[slot] <= 0:
+            raise RuntimeError(
+                f"slot {slot}: append beyond reserved lifetime at pos {pos}")
+        (bid,) = self._alloc(1)
+        self._slot_blocks[slot].append(bid)
+        self.tables[slot, j] = bid
+        self._dev_tables = None
+        self._slot_reserved[slot] -= 1
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Return the slot's blocks to the free list (LIFO), drop its
+        outstanding reservation, and clear the freed rows' positions on
+        device so a future tenant never attends stale entries."""
+        ids = self._slot_blocks[slot]
+        self._slot_blocks[slot] = []
+        self._slot_reserved[slot] = 0
+        self.tables[slot, :] = -1
+        self._dev_tables = None
+        if ids:
+            padded = np.zeros((self.max_blocks_per_slot,), np.int32)
+            padded[:len(ids)] = ids
+            self.state = tfm.PagedState(
+                k=self.state.k, v=self.state.v,
+                pos=_clear_pos(self.state.pos, jnp.asarray(padded)))
+            self._free.extend(ids)
+        return ids
+
+    # -- device transfer ----------------------------------------------------
+
+    def device_tables(self) -> jax.Array:
+        if self._dev_tables is None:
+            self._dev_tables = jnp.asarray(self.tables)
+        return self._dev_tables
+
+    def write_prefill(self, slot: int, dense_state, pads: int = 0) -> None:
+        """Copy a dense prefill cache (``models.transformer.State`` for a
+        B=1 request, budget == whole blocks) into the slot's blocks.
+        ``pads`` left-pad rows get their positions forced to -1."""
+        ids = self._slot_blocks[slot]
+        bucket = dense_state.k.shape[2]
+        if bucket != len(ids) * self.block_len:
+            raise ValueError(f"bucket {bucket} != {len(ids)} blocks of "
+                             f"{self.block_len}")
+        pos = dense_state.kpos[0, 0]
+        if pads:
+            pos = jnp.where(jnp.arange(bucket) < pads, -1, pos)
+        nb = len(ids)
+        fn = self._write_fns.get(nb)
+        if fn is None:
+            fn = self._write_fns[nb] = jax.jit(scatter_prefill,
+                                               donate_argnums=(0,))
+        self.state = fn(self.state, dense_state.k, dense_state.v, pos,
+                        jnp.asarray(ids, jnp.int32))

@@ -1,0 +1,475 @@
+"""Slot-level continuous batching and the legacy static-cohort scheduler.
+
+``ContinuousScheduler`` keeps a fixed number of batch *slots* decoding in
+one jitted step over a shared :class:`~repro.serve.cache.PagedKVCache`
+arena.  A finished slot is freed and refilled from the arrival queue on
+the very next step, so short requests never hold the batch hostage the
+way cohort scheduling does — occupancy stays near 1 under mixed-length
+traffic, which is where the tokens/s win comes from.
+
+Prefill runs one request at a time at ``B=1`` with the request's *exact*
+token length (no left padding), then scatters the dense cache into the
+slot's arena blocks.  Exact-length prefill makes every request's greedy
+output bit-identical to a one-request-at-a-time oracle regardless of
+arrival order, batch size, or what else shares the batch — the property
+the serving tests pin.  The KV budget is bucketed to the next power of
+two (whole blocks), so the *decode* step compiles exactly once.
+
+``CohortScheduler`` is the old ``ServingLoop`` body behind the same
+interface: take up to ``batch`` arrived requests, left-pad, prefill,
+decode the cohort in lockstep until all members finish, repeat.  It
+exists as the measured baseline the ``serve/*`` bench scenarios compare
+against, with two fixes over the original: the prefill sample no longer
+reuses the loop's PRNG key, and the prefill KV budget is bucketed to the
+next power of two to cap jit recompiles across cohorts.
+
+Time is *virtual*: arrivals are expressed in scheduler steps (one prefill
+or one batch-decode step advances the clock by 1), so a trace replays
+identically on any host speed.  Wall-clock is only used for the latency
+metrics themselves (TTFT, decode ms).
+
+Both schedulers report the same ``repro.obs.metrics`` names the original
+loop did:
+
+  serve.ttft_ms           histogram, per request (arrival -> first token)
+  serve.decode_ms         histogram, per decode step (per-token latency)
+  serve.batch_occupancy   histogram, active/batch per decode step
+                          (per cohort prefill for CohortScheduler)
+  serve.queue_depth       gauge, arrived requests not yet in a slot
+  serve.requests_total    counter
+  serve.tokens_total      counter
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.config import ArchConfig
+from ..distributed import sharding as shd
+from ..models import build_model
+from ..obs import metrics as obs_metrics
+from ..obs.trace import get_tracer
+from .cache import PagedKVCache, next_pow2, scatter_prefill
+
+__all__ = ["Request", "sample", "pack_prompts", "mask_padded_cache",
+           "build_serve_fns", "ContinuousScheduler", "CohortScheduler"]
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new: int
+    arrival: float = 0.0                # virtual-step arrival time
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    # filled in by the scheduler ----------------------------------------------
+    ttft_ms: Optional[float] = None     # arrival -> first token (incl.
+    #                                     queue wait)
+    total_ms: Optional[float] = None    # arrival -> request finished
+
+
+def sample(logits, key, temperature: float = 0.0):
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def pack_prompts(active: List[Request], batch: int):
+    """LEFT-pad ragged prompts into one (batch, max_len) int32 array.
+    Returns (tokens, pads) where ``pads[i]`` is request i's pad count."""
+    max_len = max(len(r.prompt) for r in active)
+    tokens = np.zeros((batch, max_len), np.int32)
+    pads = np.zeros((batch,), np.int32)
+    for i, r in enumerate(active):
+        p = np.asarray(r.prompt, np.int32).reshape(-1)
+        pads[i] = max_len - len(p)
+        tokens[i, pads[i]:] = p
+    return tokens, pads
+
+
+def mask_padded_cache(state, pads: np.ndarray):
+    """Rewrite the pad slots' cached positions to -1 so ``attend_decode``
+    (which masks ``pos_cache < 0`` as empty) never attends them."""
+    kpos = getattr(state, "kpos", None)
+    if kpos is None or not np.any(pads):
+        return state
+    slot = jnp.arange(kpos.shape[-1], dtype=jnp.int32)
+    pad_col = jnp.asarray(pads, jnp.int32)[None, :, None]
+    masked = jnp.where(slot[None, None, :] < pad_col, -1, kpos)
+    return state._replace(kpos=masked)
+
+
+def build_serve_fns(model, rules=None, budget=None):
+    def prefill(params, batch):
+        with shd.use_rules(rules):
+            return model.prefill(params, batch, budget=budget)
+
+    def decode_step(params, state, tokens):
+        with shd.use_rules(rules):
+            return model.decode_step(params, state, tokens)
+
+    return jax.jit(prefill), jax.jit(decode_step, donate_argnums=(1,))
+
+
+def _request_key(base_key, uid: int):
+    """Per-request PRNG stream: independent of scheduling order, so
+    sampled outputs don't change when the batch composition does."""
+    return jax.random.fold_in(base_key, uid)
+
+
+class _SchedulerBase:
+    """Shared construction + metrics wiring for both schedulers."""
+
+    def __init__(self, cfg: ArchConfig, params, *, batch: int,
+                 rules=None, seed: int = 0, max_new: int = 64,
+                 metrics: Optional[obs_metrics.Registry] = None):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.model = build_model(cfg)
+        self.max_new = max_new
+        self.rules = rules
+        self.seed = seed
+        self.key = jax.random.PRNGKey(seed)
+        self.metrics = metrics if metrics is not None \
+            else obs_metrics.Registry()
+
+    def _metric_handles(self):
+        m = self.metrics
+        return (m.histogram("serve.ttft_ms"), m.histogram("serve.decode_ms"),
+                m.histogram("serve.batch_occupancy"),
+                m.gauge("serve.queue_depth"),
+                m.counter("serve.requests_total"),
+                m.counter("serve.tokens_total"))
+
+
+class _Slot:
+    """One occupied batch slot of the continuous scheduler."""
+
+    __slots__ = ("req", "pos", "target", "t_arrive")
+
+    def __init__(self, req: Request, pos: int, target: int, t_arrive: float):
+        self.req = req
+        self.pos = pos          # next cache row this slot writes
+        self.target = target    # tokens to emit (min(max_new, max_steps))
+        self.t_arrive = t_arrive
+
+
+class ContinuousScheduler(_SchedulerBase):
+    """Slot-level continuous batching over a paged KV arena.
+
+    ``total_tokens`` sets the arena budget (default: enough for every
+    slot to hold ``max_seq`` rows); ``max_seq`` bounds one request's
+    prompt + generation; ``max_prefills_per_step`` caps how many arrivals
+    are admitted between decode steps (default: the batch size)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, batch: int,
+                 rules=None, seed: int = 0, max_new: int = 64,
+                 metrics: Optional[obs_metrics.Registry] = None,
+                 block_len: int = 16, max_seq: int = 1024,
+                 total_tokens: Optional[int] = None,
+                 max_prefills_per_step: Optional[int] = None):
+        super().__init__(cfg, params, batch=batch, rules=rules, seed=seed,
+                         max_new=max_new, metrics=metrics)
+        if self.model.decode_paged is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no paged decode path; use "
+                "CohortScheduler")
+        self.block_len = block_len
+        self.max_seq = max_seq
+        if total_tokens is None:
+            total_tokens = batch * max_seq
+        self.cache = PagedKVCache(cfg, batch, total_tokens=total_tokens,
+                                  max_seq=max_seq, block_len=block_len)
+        self.max_prefills_per_step = (batch if max_prefills_per_step is None
+                                      else max_prefills_per_step)
+        self._prefill_fns = {}          # KV bucket -> jitted prefill
+        # vlm prompts prepend n_patches rows to the cache during prefill
+        self._extra_rows = int(cfg.n_patches or 0)
+
+        model, rules_ = self.model, self.rules
+
+        def _decode(params, paged, tokens, tables, slot_pos):
+            with shd.use_rules(rules_):
+                logits, paged = model.decode_paged(params, paged, tokens,
+                                                   tables, slot_pos)
+            # fold the greedy pick into the same dispatch: one jit call
+            # per decode step instead of decode + eager argmax
+            return logits, jnp.argmax(logits, axis=-1), paged
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    # -- helpers ------------------------------------------------------------
+
+    def _bucket(self, prompt_len: int) -> int:
+        """KV budget for one prefill: next power of two, whole blocks."""
+        b = max(next_pow2(max(prompt_len, 1)), self.block_len)
+        bl = self.block_len
+        return -(-b // bl) * bl
+
+    def _get_prefill(self, bucket: int):
+        """Fused prefill -> scatter-into-blocks -> greedy pick, one jitted
+        dispatch per admission (donating the arena)."""
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            model, rules = self.model, self.rules
+
+            def prefill_write(params, batch, paged, ids):
+                with shd.use_rules(rules):
+                    logits, dense = model.prefill(params, batch,
+                                                  budget=bucket)
+                paged = scatter_prefill(paged, dense.k, dense.v,
+                                        dense.kpos[0, 0], ids)
+                return logits, jnp.argmax(logits, axis=-1), paged
+
+            fn = self._prefill_fns[bucket] = jax.jit(
+                prefill_write, donate_argnums=(2,))
+        return fn
+
+    def _prefill_batch(self, prompt: np.ndarray):
+        batch = {"tokens": jnp.asarray(
+            np.asarray(prompt, np.int32).reshape(1, -1))}
+        if self.cfg.n_patches:
+            batch["patches"] = jnp.zeros(
+                (1, self.cfg.n_patches, self.cfg.d_model), jnp.float32)
+        return batch
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, requests: List[Request], temperature: float = 0.0,
+            max_steps: int = 64) -> Dict[int, List[int]]:
+        tracer = get_tracer()
+        ttft_h, dec_h, occ_h, qdepth, req_c, tok_c = self._metric_handles()
+        base_key = jax.random.PRNGKey(self.seed)
+
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.uid)))
+        queue: deque = deque()          # arrived, waiting for a slot
+        arrive_wall: Dict[int, float] = {}
+        slots: List[Optional[_Slot]] = [None] * self.batch
+        results: Dict[int, List[int]] = {}
+        clock = 0.0                     # virtual steps
+
+        def finish(i: int):
+            s = slots[i]
+            s.req.done = True
+            s.req.total_ms = (time.perf_counter() - s.t_arrive) * 1e3
+            results[s.req.uid] = s.req.out_tokens
+            req_c.inc()
+            tok_c.inc(len(s.req.out_tokens))
+            self.cache.free_slot(i)
+            slots[i] = None
+
+        while pending or queue or any(s is not None for s in slots):
+            # arrivals: pending -> queue once the virtual clock reaches them
+            now = time.perf_counter()
+            while pending and pending[0].arrival <= clock:
+                r = pending.popleft()
+                queue.append(r)
+                arrive_wall[r.uid] = now
+            qdepth.set(len(queue))
+
+            # admission: refill free slots while the arena has room
+            n_pref = 0
+            while queue and n_pref < self.max_prefills_per_step:
+                free = [i for i, s in enumerate(slots) if s is None]
+                if not free:
+                    break
+                r = queue[0]
+                target = min(r.max_new, max_steps)
+                plen = len(r.prompt) + self._extra_rows
+                bucket = self._bucket(plen)
+                lifetime = max(bucket, plen + target)
+                if not self.cache.can_admit(lifetime):
+                    if not any(s is not None for s in slots):
+                        raise RuntimeError(
+                            f"request {r.uid} (lifetime {lifetime} tokens) "
+                            f"cannot fit the arena even when idle")
+                    break               # wait for a slot to free blocks
+                queue.popleft()
+                i = free[0]
+                with tracer.span("serve.prefill", uid=r.uid,
+                                 prompt_len=len(r.prompt), bucket=bucket):
+                    ids = self.cache.admit(i, bucket, lifetime)
+                    logits, greedy, self.cache.state = self._get_prefill(
+                        bucket)(self.params, self._prefill_batch(r.prompt),
+                                self.cache.state,
+                                jnp.asarray(ids, jnp.int32))
+                    if temperature <= 0:
+                        tok = int(jax.block_until_ready(greedy)[0])
+                    else:
+                        key = _request_key(base_key, r.uid)
+                        tok = int(jax.block_until_ready(
+                            sample(logits, jax.random.fold_in(key, 0),
+                                   temperature))[0])
+                t_first = time.perf_counter()
+                r.ttft_ms = (t_first - arrive_wall[r.uid]) * 1e3
+                ttft_h.observe(r.ttft_ms)
+                r.out_tokens.append(tok)
+                slots[i] = _Slot(r, pos=plen, target=target,
+                                 t_arrive=arrive_wall[r.uid])
+                if len(r.out_tokens) >= target:
+                    finish(i)
+                n_pref += 1
+                clock += 1.0
+                now = time.perf_counter()
+                while pending and pending[0].arrival <= clock:
+                    rr = pending.popleft()
+                    queue.append(rr)
+                    arrive_wall[rr.uid] = now
+                qdepth.set(len(queue))
+
+            active = [i for i, s in enumerate(slots) if s is not None]
+            if not active:
+                if pending:
+                    # idle: jump the virtual clock to the next arrival
+                    clock = max(clock, pending[0].arrival)
+                    continue
+                if queue:
+                    continue            # admission will retry (or raise)
+                break
+
+            # one decode step over every slot (inactive slots write the
+            # scratch block and their logits are discarded)
+            occ_h.observe(len(active) / self.batch)
+            tokens = np.zeros((self.batch, 1), np.int32)
+            slot_pos = np.zeros((self.batch,), np.int32)
+            for i in active:
+                s = slots[i]
+                tokens[i, 0] = s.req.out_tokens[-1]
+                slot_pos[i] = s.pos
+                self.cache.append(i, s.pos)
+            t0 = time.perf_counter()
+            with tracer.span("serve.decode_step", n_active=len(active),
+                             queued=len(queue)):
+                logits, greedy, self.cache.state = self._decode(
+                    self.params, self.cache.state, jnp.asarray(tokens),
+                    self.cache.device_tables(), jnp.asarray(slot_pos))
+                if temperature <= 0:
+                    toks = jax.block_until_ready(greedy)
+                else:
+                    toks = np.zeros((self.batch,), np.int64)
+                    for i in active:
+                        s = slots[i]
+                        key = _request_key(base_key, s.req.uid)
+                        step_key = jax.random.fold_in(
+                            key, len(s.req.out_tokens))
+                        toks[i] = int(jax.block_until_ready(sample(
+                            logits[i:i + 1], step_key, temperature))[0])
+            dec_h.observe((time.perf_counter() - t0) * 1e3)
+            clock += 1.0
+            for i in active:
+                s = slots[i]
+                s.pos += 1
+                s.req.out_tokens.append(int(toks[i]))
+                if len(s.req.out_tokens) >= s.target:
+                    finish(i)
+        qdepth.set(0)
+        return results
+
+
+class CohortScheduler(_SchedulerBase):
+    """Static-cohort serving: up to ``batch`` arrived requests prefill
+    together, decode in lockstep until every member finishes, then the
+    next cohort forms.  The measured baseline for continuous batching."""
+
+    def __init__(self, cfg: ArchConfig, params, *, batch: int,
+                 rules=None, seed: int = 0, max_new: int = 64,
+                 metrics: Optional[obs_metrics.Registry] = None):
+        super().__init__(cfg, params, batch=batch, rules=rules, seed=seed,
+                         max_new=max_new, metrics=metrics)
+        self._fns = {}          # KV budget bucket -> (prefill, decode)
+
+    def _get_fns(self, prompt_len: int):
+        # power-of-two budget bucketing: cohorts whose budgets round to
+        # the same bucket share one decode compilation instead of
+        # recompiling per distinct (prompt_len + max_new)
+        budget = next_pow2(prompt_len + self.max_new + 1)
+        if budget not in self._fns:
+            self._fns[budget] = build_serve_fns(self.model, self.rules,
+                                                budget=budget)
+        return self._fns[budget]
+
+    def run(self, requests: List[Request], temperature: float = 0.0,
+            max_steps: int = 64) -> Dict[int, List[int]]:
+        tracer = get_tracer()
+        ttft_h, dec_h, occ_h, qdepth, req_c, tok_c = self._metric_handles()
+
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.uid)))
+        queue: deque = deque()
+        arrive_wall: Dict[int, float] = {}
+        results: Dict[int, List[int]] = {}
+        clock = 0.0
+
+        while pending or queue:
+            now = time.perf_counter()
+            while pending and pending[0].arrival <= clock:
+                r = pending.popleft()
+                queue.append(r)
+                arrive_wall[r.uid] = now
+            if not queue:               # idle until the next arrival
+                clock = max(clock, pending[0].arrival)
+                continue
+            active = [queue.popleft()
+                      for _ in range(min(self.batch, len(queue)))]
+            qdepth.set(len(queue))
+            occ_h.observe(len(active) / self.batch)
+            with tracer.span("serve.batch", n_active=len(active),
+                             queued=len(queue)):
+                prompts, pads = pack_prompts(active, self.batch)
+                prefill_fn, decode_fn = self._get_fns(prompts.shape[1])
+                batch = {"tokens": jnp.asarray(prompts)}
+                if self.cfg.is_encdec:
+                    batch["frames"] = jnp.zeros(
+                        (self.batch, prompts.shape[1], self.cfg.d_model),
+                        jnp.float32)
+                if self.cfg.n_patches:
+                    batch["patches"] = jnp.zeros(
+                        (self.batch, self.cfg.n_patches, self.cfg.d_model),
+                        jnp.float32)
+                with tracer.span("serve.prefill",
+                                 prompt_len=int(prompts.shape[1])):
+                    logits, state = prefill_fn(self.params, batch)
+                    state = mask_padded_cache(state, pads)
+                    # split before sampling: the loop key must never be
+                    # consumed directly, or the next split replays it
+                    self.key, sub = jax.random.split(self.key)
+                    toks = sample(logits, sub, temperature)[:, None]
+                    toks = jax.block_until_ready(toks)
+                clock += 1.0
+                t_first = time.perf_counter()
+                for r in active:
+                    r.ttft_ms = (t_first - arrive_wall[r.uid]) * 1e3
+                    ttft_h.observe(r.ttft_ms)
+                for step in range(max_steps):
+                    for i, r in enumerate(active):
+                        if not r.done and len(r.out_tokens) < r.max_new:
+                            r.out_tokens.append(int(toks[i, 0]))
+                        elif not r.done:
+                            r.done = True
+                    if all(r.done or len(r.out_tokens) >= r.max_new
+                           for r in active):
+                        break
+                    self.key, sub = jax.random.split(self.key)
+                    t0 = time.perf_counter()
+                    with tracer.span("serve.decode_step", step=step):
+                        logits, state = decode_fn(self.params, state,
+                                                  toks.astype(jnp.int32))
+                        toks = sample(logits, sub, temperature)[:, None]
+                        toks = jax.block_until_ready(toks)
+                    dec_h.observe((time.perf_counter() - t0) * 1e3)
+                    clock += 1.0
+                t_done = time.perf_counter()
+                for r in active:
+                    r.total_ms = (t_done - arrive_wall[r.uid]) * 1e3
+                    results[r.uid] = r.out_tokens
+                    req_c.inc()
+                    tok_c.inc(len(r.out_tokens))
+        qdepth.set(0)
+        return results

@@ -1,0 +1,345 @@
+"""Continuous-batching serving subsystem: paged KV cache allocator
+invariants, block-table attention vs the dense cache path, greedy output
+bit-identity across scheduling (arrival order, batch size, scheduler
+choice, solo oracle), the jit-recompile cap, the prefill key-split fix,
+arrival-trace determinism, and the serve/* bench rows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import ArchConfig, AttnConfig
+from repro.distributed.sharding import split_tree
+from repro.launch.serve import ServingLoop
+from repro.models import attention as attn
+from repro.models import build_model
+from repro.models import transformer as tfm
+from repro.serve import (CohortScheduler, ContinuousScheduler, PagedKVCache,
+                         Request, make_trace, next_pow2)
+
+
+def _cfg(vocab=128):
+    return ArchConfig(name="sv", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=vocab,
+                      attn=AttnConfig(chunk=16))
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = _cfg()
+    model = build_model(cfg)
+    params, _ = split_tree(model.init(jax.random.PRNGKey(1)))
+    return cfg, model, params
+
+
+def _reqs(cfg, lens, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        (int(n),)).astype(np.int32),
+                    max_new=int(m))
+            for i, (n, m) in enumerate(zip(lens, max_new))]
+
+
+def _continuous(cfg, params, batch):
+    return ContinuousScheduler(cfg, params, batch=batch, max_seq=64,
+                               block_len=8)
+
+
+# ---------------------------------------------------------------------------
+# PagedKVCache allocator
+# ---------------------------------------------------------------------------
+
+def test_paged_cache_alloc_free_reuse():
+    cache = PagedKVCache(_cfg(), batch=2, total_tokens=64, max_seq=32,
+                         block_len=8)
+    n_free0 = cache.free_blocks
+    ids = cache.admit(0, prefill_tokens=16, lifetime_tokens=24)
+    assert len(ids) == 2 and 0 not in ids          # block 0 is scratch
+    assert cache.free_blocks == n_free0 - 2
+    assert cache.reserved_blocks == 1              # 24 tokens -> 3 blocks
+    assert list(cache.tables[0, :2]) == ids
+
+    cache.append(0, 16)                            # crosses into block 3
+    assert cache.reserved_blocks == 0
+    assert cache.free_blocks == n_free0 - 3
+    cache.append(0, 17)                            # same block: no alloc
+    assert cache.free_blocks == n_free0 - 3
+
+    freed = cache.free_slot(0)
+    assert len(freed) == 3 and set(ids) <= set(freed)
+    assert cache.free_blocks == n_free0
+    assert cache.used_blocks == 0
+    assert (cache.tables[0] == -1).all()
+    # freed blocks' device position rows were cleared
+    pos = np.asarray(cache.state.pos)
+    for b in freed:
+        assert (pos[b] == -1).all()
+
+    # LIFO reuse: the next admission gets just-freed blocks back
+    ids2 = cache.admit(1, prefill_tokens=8, lifetime_tokens=8)
+    assert ids2[0] in freed
+
+
+def test_paged_cache_admission_when_full():
+    cache = PagedKVCache(_cfg(), batch=4, total_tokens=32, max_seq=32,
+                         block_len=8)                  # 4 usable blocks
+    assert cache.can_admit(24)
+    cache.admit(0, prefill_tokens=16, lifetime_tokens=24)  # 3 blocks
+    assert cache.can_admit(8)
+    assert not cache.can_admit(16)      # only 1 unreserved block left
+    cache.admit(1, prefill_tokens=8, lifetime_tokens=8)
+    assert not cache.can_admit(1)       # arena exhausted
+    cache.free_slot(0)
+    assert cache.can_admit(24)          # blocks + reservation returned
+    # over-reserving beyond the guarantee is an error, not a deadlock
+    with pytest.raises(RuntimeError):
+        cache.admit(2, prefill_tokens=32, lifetime_tokens=64)
+
+
+def test_paged_cache_append_guards():
+    cache = PagedKVCache(_cfg(), batch=1, total_tokens=32, max_seq=32,
+                         block_len=8)
+    cache.admit(0, prefill_tokens=8, lifetime_tokens=8)   # no reservation
+    with pytest.raises(RuntimeError, match="reserved lifetime"):
+        cache.append(0, 8)              # needs a block it never reserved
+
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (1, 2, 3, 8, 9, 17)] == \
+        [1, 2, 4, 8, 16, 32]
+
+
+# ---------------------------------------------------------------------------
+# Block-table attention vs the dense cache path
+# ---------------------------------------------------------------------------
+
+def test_attend_paged_matches_attend_decode():
+    """Gathering (k, v, pos) through a block table must reproduce the
+    dense ragged-decode attention bit-for-bit."""
+    rng = np.random.default_rng(0)
+    B, W, KV, HP, HD, BL = 2, 16, 2, 4, 8, 4
+    k = rng.standard_normal((B, W, KV, HD)).astype(np.float32)
+    v = rng.standard_normal((B, W, KV, HD)).astype(np.float32)
+    q = rng.standard_normal((B, 1, HP, HD)).astype(np.float32)
+    # ragged: slot 0 holds 10 rows, slot 1 holds 6
+    pos = np.full((B, W), -1, np.int32)
+    pos[0, :10] = np.arange(10)
+    pos[1, :6] = np.arange(6)
+    q_position = jnp.asarray([10, 6], jnp.int32)
+    idx_map = attn.kv_index_map(HP, KV, HP)
+
+    dense = attn.attend_decode(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), jnp.asarray(pos), idx_map,
+                               q_position=q_position)
+
+    # scatter the same rows into a block arena: slot 0 -> blocks 1..3,
+    # slot 1 -> blocks 4..5 (table padded with -1)
+    n_blocks = 7
+    kb = np.zeros((n_blocks, BL, KV, HD), np.float32)
+    vb = np.zeros((n_blocks, BL, KV, HD), np.float32)
+    pb = np.full((n_blocks, BL), -1, np.int32)
+    table = np.full((B, 4), -1, np.int32)
+    table[0, :3] = [1, 2, 3]
+    table[1, :2] = [4, 5]
+    for s in range(B):
+        for j, b in enumerate(t for t in table[s] if t >= 0):
+            kb[b] = k[s, j * BL:(j + 1) * BL]
+            vb[b] = v[s, j * BL:(j + 1) * BL]
+            pb[b] = pos[s, j * BL:(j + 1) * BL]
+    # poison the scratch block: a correct gather never attends it
+    kb[0] += 100.0
+    pb[0] = 0
+
+    paged = attn.attend_paged(jnp.asarray(q), jnp.asarray(kb),
+                              jnp.asarray(vb), jnp.asarray(pb),
+                              jnp.asarray(table), idx_map,
+                              q_position=q_position)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(paged))
+
+
+def test_forward_paged_decode_rejects_unpaged_family():
+    cfg = ArchConfig(name="ssm", family="ssm", n_layers=2, d_model=32,
+                     n_heads=4, n_kv_heads=2, d_ff=64, vocab=64)
+    assert build_model(cfg).decode_paged is None
+    paged = tfm.init_paged_state(_cfg(), 2, 8)
+    with pytest.raises(NotImplementedError):
+        tfm.forward_paged_decode({}, cfg, jnp.zeros((1, 1), jnp.int32),
+                                 paged, jnp.zeros((1, 1), jnp.int32),
+                                 jnp.zeros((1,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Greedy bit-identity across scheduling
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_solo_oracle_and_orderings(served):
+    """Continuous batching must not change greedy outputs: same tokens
+    for every request whether served alone, in a different arrival
+    order, or at a different batch size."""
+    cfg, model, params = served
+    reqs = lambda: _reqs(cfg, lens=(12, 7, 9), max_new=(3, 4, 3))
+
+    base = _continuous(cfg, params, 2).run(reqs())
+    oracle = {}
+    for r in reqs():
+        oracle.update(_continuous(cfg, params, 1).run([r]))
+    assert base == oracle
+
+    reordered = _continuous(cfg, params, 2).run(reqs()[::-1])
+    assert reordered == base
+
+    wider = _continuous(cfg, params, 3).run(reqs())
+    assert wider == base
+
+    # teacher-forcing reference for one member
+    r0 = reqs()[0]
+    toks = list(r0.prompt)
+    for _ in range(r0.max_new):
+        logits = model.forward(
+            params, {"tokens": jnp.asarray([toks]),
+                     "labels": jnp.zeros((1, len(toks)), jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1, :cfg.vocab])))
+    assert base[0] == toks[len(r0.prompt):]
+
+
+def test_continuous_matches_cohort_equal_lengths(served):
+    """For equal-length prompts (no cohort padding) the two schedulers
+    are numerically identical under greedy decoding."""
+    cfg, _, params = served
+    mk = lambda: _reqs(cfg, lens=(10, 10), max_new=(3, 3), seed=2)
+    cont = _continuous(cfg, params, 2).run(mk())
+    coh = CohortScheduler(cfg, params, batch=2).run(mk())
+    assert cont == coh
+
+
+def test_continuous_slot_refill_under_arrivals(served):
+    """More requests than slots + staggered arrivals: every request is
+    served, outputs still match the solo oracle, and the arena drains."""
+    cfg, _, params = served
+    mk = lambda: [Request(uid=i, prompt=p.prompt, max_new=p.max_new,
+                          arrival=float(i))
+                  for i, p in enumerate(
+                      _reqs(cfg, lens=(11, 6, 9, 7, 8), max_new=(2, 4, 3,
+                                                                 2, 3),
+                            seed=3))]
+    sched = _continuous(cfg, params, 2)
+    out = sched.run(mk())
+    assert set(out) == set(range(5))
+    oracle = {}
+    for r in mk():
+        r.arrival = 0.0
+        oracle.update(_continuous(cfg, params, 1).run([r]))
+    assert out == oracle
+    assert sched.cache.used_blocks == 0
+    assert sched.cache.free_blocks == sched.cache.n_blocks - 1
+    snap = {row["name"]: row for row in sched.metrics.snapshot()}
+    assert snap["serve.requests_total"]["value"] == 5
+    assert snap["serve.tokens_total"]["value"] == 2 + 4 + 3 + 2 + 3
+
+
+# ---------------------------------------------------------------------------
+# Satellite fixes: recompile cap + prefill key split
+# ---------------------------------------------------------------------------
+
+def test_cohort_budget_bucketing_caps_recompiles(served):
+    """Prompt lengths whose KV budgets land in the same power-of-two
+    bucket must share one compiled (prefill, decode) pair."""
+    cfg, _, params = served
+    sched = CohortScheduler(cfg, params, batch=1, max_new=4)
+    sched.run(_reqs(cfg, lens=(20,), max_new=(2,), seed=4))
+    sched.run(_reqs(cfg, lens=(24,), max_new=(2,), seed=5))
+    # budgets 25 and 29 both bucket to 32 -> one compiled pair
+    assert len(sched._fns) == 1
+
+
+def test_cohort_prefill_splits_sampling_key(served):
+    """Regression: the prefill sample must consume a split of the loop
+    key, not the key itself — a prefill-only run must advance the key."""
+    cfg, _, params = served
+    sched = CohortScheduler(cfg, params, batch=1, seed=7)
+    key0 = np.asarray(sched.key).copy()
+    sched.run(_reqs(cfg, lens=(8,), max_new=(1,), seed=6),
+              temperature=1.0, max_steps=1)
+    assert not np.array_equal(np.asarray(sched.key), key0)
+    # and two consecutive prefill-only runs draw from different streams
+    out1 = sched.run(_reqs(cfg, lens=(8,), max_new=(1,), seed=6),
+                     temperature=1.0, max_steps=1)
+    out2 = sched.run(_reqs(cfg, lens=(8,), max_new=(1,), seed=6),
+                     temperature=1.0, max_steps=1)
+    assert not np.array_equal(np.asarray(sched.key), key0)
+    assert out1.keys() == out2.keys()
+
+
+def test_continuous_sampling_is_scheduling_independent(served):
+    """Per-request fold_in keys: sampled (temperature > 0) outputs don't
+    depend on batch size or arrival order."""
+    cfg, _, params = served
+    mk = lambda: _reqs(cfg, lens=(9, 12, 7), max_new=(3, 3, 3), seed=8)
+    a = ContinuousScheduler(cfg, params, batch=3, max_seq=64, block_len=8,
+                            seed=11).run(mk(), temperature=0.7)
+    b = ContinuousScheduler(cfg, params, batch=1, max_seq=64, block_len=8,
+                            seed=11).run(mk()[::-1], temperature=0.7)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Arrival traces + launch wrapper + bench rows
+# ---------------------------------------------------------------------------
+
+def test_traces_deterministic_and_shaped():
+    a = make_trace("poisson", 8, vocab=64, rate=0.5, seed=3)
+    b = make_trace("poisson", 8, vocab=64, rate=0.5, seed=3)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[-1] > 0
+    # same seed, different arrival process -> identical request shapes
+    u = make_trace("uniform", 8, vocab=64, rate=0.5, seed=3)
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, u))
+    bursty = make_trace("bursty", 8, vocab=64, rate=0.5, burst=4, seed=3)
+    assert bursty[0].arrival == bursty[1].arrival    # burst members co-arrive
+    with pytest.raises(ValueError):
+        make_trace("laplace", 4, vocab=64)
+
+
+def test_serving_loop_falls_back_to_cohort():
+    cfg = ArchConfig(name="ssm", family="ssm", n_layers=2, d_model=32,
+                     n_heads=4, n_kv_heads=2, d_ff=64, vocab=64)
+    model = build_model(cfg)
+    params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
+    loop = ServingLoop(cfg, params, batch=2, scheduler="continuous")
+    assert loop.scheduler_kind == "cohort"
+    out = loop.run(_reqs(cfg, lens=(8, 8), max_new=(2, 2)))
+    assert all(len(v) == 2 for v in out.values())
+
+
+def test_serve_scenarios_registered_and_runnable(served):
+    from repro.bench.runner import RunOptions, project_scenario, sweep
+    from repro.bench.scenario import ServeScenario, get_scenario, scenarios
+
+    names = [s.name for s in scenarios(tag="serve")]
+    for arrival in ("uniform", "poisson", "bursty"):
+        for sched in ("continuous", "cohort"):
+            assert f"serve/{arrival}/{sched}" in names
+    # serving cells are excluded from the smoke kernel sweep
+    assert not [s for s in scenarios(smoke=True) if s.is_serving]
+    with pytest.raises(ValueError):
+        project_scenario(get_scenario("serve/uniform/continuous"), "A100")
+
+    sc = ServeScenario(
+        name="serve/test/tiny", shape=(2, 3),
+        workload={"scheduler": "continuous", "arrival": "uniform",
+                  "n_requests": 3, "batch": 2, "rate": 1.0,
+                  "prompt_lens": [5, 10], "max_new": [2, 3], "seed": 0,
+                  "block_len": 8},
+        tags=("serve",), section="serve")
+    report = sweep([sc], chips=["A100"], opts=RunOptions(emit=None))
+    rows = [r for r in report.results if r.scenario == "serve/test/tiny"]
+    assert len(rows) == 1               # measured only: no projection rows
+    m = rows[0].metrics
+    assert rows[0].kind == "measured"
+    assert m["us_median"] > 0 and len(m["times_us"]) >= 2
+    assert m["tokens"] > 0 and m["requests"] == 3
+    assert 0 < m["occupancy_mean"] <= 1
+    assert m["tokens_per_s"] > 0
