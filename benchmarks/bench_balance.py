@@ -13,22 +13,23 @@ def run(report):
         b = balance.machine_balance(chip)
         report.row("balance", name,
                    bf_f32=round(b.bf_f32, 4),
-                   bf_f64=(round(b.bf_f64, 4) if b.bf_f64 != float("inf")
-                           else "inf"),
+                   bf_f64=(round(b.bf_f64, 4) if chip.has_f64 else "n/a"),
                    bw_gbs=chip.mem_bw_gbs, tflops_f32=chip.tflops_f32)
 
     report.section("Fig1b: compute density (GFLOPS/mm^2)")
     for name, chip in hardware.CATALOG.items():
-        if not chip.die_mm2:
-            continue
+        if not chip.density_known:
+            continue                     # die area unpublished: no density
         b = balance.machine_balance(chip)
         report.row("density", name,
                    density_f32=round(b.density_f32, 2),
-                   density_f64=round(b.density_f64, 2))
+                   density_f64=(round(b.density_f64, 2) if chip.has_f64
+                                else "n/a"))
 
     report.section("S6: expected minimum upgrade speedups "
                    "T = min(FLOP ratio, BW ratio)")
     pairs = [("K80", "P100"), ("P100", "V100"), ("V100", "A100"),
+             ("A100", "H100-SXM"), ("H100-SXM", "H200"),
              ("GTX1050Ti", "RTX2060S"), ("TPUv4", "TPUv5e"),
              ("TPUv5e", "TPUv5p")]
     for old, new in pairs:

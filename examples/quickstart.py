@@ -144,6 +144,12 @@ def main():
     y3 = ops.stream(x, iters=4, strategy="overlap", depth=3, wait_group=1)
     print(f"stream depth=3 wait_group=1 ok, out={y3.shape}")
 
+    # Hopper-style TMA bulk copies are a strategy too: one descriptor per
+    # tile, all operands completing on a shared per-slot mbarrier, always
+    # the deepest issue-ahead (no wait_group axis).
+    y4 = ops.stream(x, iters=4, strategy="tma", depth=3)
+    print(f"stream strategy=tma depth=3 ok, out={y4.shape}")
+
     # The regime/* scenario family measures, per kernel, a sync baseline
     # plus async at ring depths 2/3/4; sweep() folds the measurements into
     # one "async pays / neutral / hurts" verdict row with the measured
@@ -159,6 +165,22 @@ def main():
           f"best=d{m['best_depth']}, {m['speedup']:.2f}x vs sync)")
     # CLI equivalent:
     #   python -m repro.bench.cli sweep --tag regime --json BENCH_regime.json
+
+    # --- Lineage validation (repro.bench.lineage) ---------------------------
+    # The paper's §6 expectation model, made predictive: catalog-derived
+    # speedups for the K80 -> ... -> H100 arc, judged against committed
+    # published numbers (experiments/baselines/LINEAGE_hopper.json).
+    from repro.bench import lineage
+    from repro.core import balance, hardware
+
+    exp = balance.expect_speedup(hardware.get_chip("A100"),
+                                 hardware.get_chip("H100-SXM"))
+    verdicts = lineage.validate(lineage.load_reference(
+        lineage.default_reference_path()))
+    print(f"lineage: A100->H100-SXM expected {exp.expected:.2f}x "
+          f"({exp.binds} bind); "
+          f"{sum(v.ok for v in verdicts)}/{len(verdicts)} pairs within band")
+    # CLI equivalent:  python -m repro.bench.cli lineage --json LINEAGE.json
 
     # --- Observability (repro.obs) ------------------------------------------
     # Tracing is off by default and free when off.  Enabled, every layer of

@@ -178,6 +178,50 @@ def compare_tables(pattern):
               f"{c['missing']} missing)*")
 
 
+def lineage_tables(pattern):
+    """Render lineage-validation verdict documents (catalog expectations vs
+    published chip-pair speedups, from `repro.bench.cli lineage --json`)."""
+    for path in sorted(glob.glob(pattern)):
+        try:
+            doc = json.load(open(path))
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"\n*(skipping {path}: {e})*")
+            continue
+        if doc.get("kind") != "lineage-validation":
+            print(f"\n*(skipping {path}: not a lineage-validation doc)*")
+            continue
+        c = doc.get("counts", {})
+        gate = "**DRIFTED**" if not doc.get("ok", True) else "ok"
+        print(f"\n### Lineage validation: {os.path.basename(path)} "
+              f"(reference {doc.get('reference', '?')}) — gate {gate}\n")
+        chain = doc.get("chain", [])
+        if chain:
+            arc = chain[0]["old"] + " → " + " → ".join(
+                r["new"] for r in chain)
+            print(f"Catalog expectation arc ({chain[0]['precision']}): "
+                  f"{arc}\n")
+            print("| pair | expected | FLOP ratio | BW ratio | binds |")
+            print("|---|---|---|---|---|")
+            for r in chain:
+                print(f"| {r['old']} → {r['new']} | {r['expected']:.2f}x "
+                      f"| {r['flop_ratio']:.2f}x | {r['bw_ratio']:.2f}x "
+                      f"| {r['binds']} |")
+            print()
+        print("| verdict | pair | prec | expected | published | dev "
+              "| band | binds |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in doc.get("rows", []):
+            verdict = r["verdict"]
+            if verdict != "within-band":
+                verdict = f"**{verdict}**"
+            print(f"| {verdict} | {r['old']} → {r['new']} "
+                  f"| {r['precision']} | {r['expected']:.2f}x "
+                  f"| {r['published']:.2f}x | {r['rel_dev']:+.1%} "
+                  f"| ±{r['band']:.0%} | {r['binds']} |")
+        print(f"\n*({c.get('within-band', 0)} within-band, "
+              f"{c.get('over', 0)} over, {c.get('under', 0)} under)*")
+
+
 def metrics_tables(pattern):
     """Render obs-metrics snapshots (serving TTFT/latency/occupancy)."""
     for path in sorted(glob.glob(pattern)):
@@ -215,6 +259,9 @@ def main(argv=None):
                          "`python -m repro.obs.cli compare --json`)")
     ap.add_argument("--metrics", default=None, metavar="GLOB",
                     help="obs-metrics snapshots (from serve --metrics-json)")
+    ap.add_argument("--lineage", default=None, metavar="GLOB",
+                    help="lineage-validation verdict JSONs (from "
+                         "`python -m repro.bench.cli lineage --json`)")
     ap.add_argument("--no-dryrun", action="store_true",
                     help="skip the dry-run roofline tables")
     args = ap.parse_args(argv)
@@ -225,6 +272,8 @@ def main(argv=None):
         compare_tables(args.compare)
     if args.metrics:
         metrics_tables(args.metrics)
+    if args.lineage:
+        lineage_tables(args.lineage)
 
 
 if __name__ == "__main__":

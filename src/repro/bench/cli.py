@@ -15,13 +15,14 @@ from __future__ import annotations
 
 import argparse
 import logging
+import os
 import sys
 from typing import List, Optional
 
 from ..core import hardware
 from ..core.async_pipeline import Strategy, parse_strategy
 from ..tuning.registry import Registry
-from . import runner, scenario
+from . import lineage, runner, scenario
 from .results import BenchReport
 
 
@@ -186,6 +187,56 @@ def cmd_sweep(args) -> int:
     return 0
 
 
+def cmd_lineage(args) -> int:
+    """Validate catalog speedup expectations against the committed
+    published-number reference table; nonzero on any over/under verdict."""
+    import json as _json
+    stream = _progress_stream(args)
+    try:
+        pairs = lineage.load_reference(args.reference)
+    except (OSError, ValueError, KeyError,
+            _json.JSONDecodeError) as e:
+        print(f"error: cannot load reference {args.reference}: {e}",
+              file=sys.stderr)
+        return 2
+    verdicts = lineage.validate(pairs)
+    chain = lineage.lineage_chain(precision=args.precision)
+    print(f"# lineage arc ({args.precision}): " + " -> ".join(
+        hardware.DATACENTER_LINEAGE), file=stream)
+    for v in chain:
+        print(f"chain    {v.old:>9s} -> {v.new:<10s} "
+              f"expected={v.expected:5.2f}x "
+              f"(flops {v.flop_ratio:.2f}x, bw {v.bw_ratio:.2f}x; "
+              f"{v.binds} bind)", file=stream)
+    for v in verdicts:
+        print(f"{v.verdict:<12s} {v.old:>9s} -> {v.new:<10s} "
+              f"[{v.precision}] expected={v.expected:5.2f}x "
+              f"published={v.published:5.2f}x "
+              f"dev={v.rel_dev:+.1%} band=+-{v.band:.0%}", file=stream)
+    doc = lineage.to_doc(verdicts, chain,
+                         reference=os.path.basename(args.reference))
+    if args.json:
+        if args.json == "-":
+            _json.dump(doc, sys.stdout, indent=1, sort_keys=True)
+            sys.stdout.write("\n")
+        else:
+            with open(args.json, "w") as f:
+                _json.dump(doc, f, indent=1, sort_keys=True)
+            print(f"# wrote {len(verdicts)} verdicts to {args.json}",
+                  file=stream)
+    c = doc["counts"]
+    print(f"# lineage: {c.get('within-band', 0)} within-band, "
+          f"{c.get('over', 0)} over, {c.get('under', 0)} under",
+          file=stream)
+    if not doc["ok"]:
+        bad = [f"{v.old}->{v.new}[{v.precision}]" for v in verdicts
+               if not v.ok]
+        print(f"error: catalog expectations drifted outside the published "
+              f"band: {bad}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.bench.cli",
                                  description=__doc__.splitlines()[0])
@@ -247,6 +298,22 @@ def main(argv=None) -> int:
                    help="restrict the projection (repeatable; default: "
                         "every registered chip)")
     p.set_defaults(fn=cmd_sweep)
+
+    p = sub.add_parser("lineage",
+                       help="validate catalog speedup expectations against "
+                            "the committed published-number reference")
+    p.add_argument("--reference", default=lineage.default_reference_path(),
+                   metavar="PATH",
+                   help="lineage-reference JSON "
+                        "(default: experiments/baselines/"
+                        "LINEAGE_hopper.json)")
+    p.add_argument("--precision", default="f32", choices=("f32", "f64"),
+                   help="precision for the lineage-arc chain rows "
+                        "(reference pairs carry their own)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write the lineage-validation verdict document "
+                        "('-' for stdout; progress then goes to stderr)")
+    p.set_defaults(fn=cmd_lineage)
 
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO if args.verbose

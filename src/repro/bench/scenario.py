@@ -273,6 +273,14 @@ def _register_defaults() -> None:
                 kernel=kernel, shape=shape, strategy=strat,
                 config={"depth": depth}, workload=dict(workload),
                 tags=("regime",), section="regime"))
+            # Hopper-style bulk copies: the regime reducer takes the min
+            # across async strategies per depth, so TMA rows slot in as a
+            # second async contender rather than a new verdict family
+            register(Scenario(
+                name=f"regime/{kernel}/{Strategy.TMA.value}/d{depth}",
+                kernel=kernel, shape=shape, strategy=Strategy.TMA,
+                config={"depth": depth}, workload=dict(workload),
+                tags=("regime",), section="regime"))
 
     # paper Fig. 4: the four Rodinia kernels x every async strategy
     fig4 = {

@@ -17,6 +17,18 @@ semaphores).  The paper's Algorithms 1-3 map to four selectable strategies:
   Strategy.DROP_OFF        Alg. 3: sub-tile chunks; wait for chunk c, read it
                            into VREG values, issue the next DMA *before*
                            computing on c.  No tile-level barrier.
+  Strategy.TMA             Hopper-style bulk copies (Luo et al.,
+                           arXiv:2402.13499 / 2501.12084): one descriptor-
+                           issued 1D/2D bulk copy per operand tile, all
+                           operands of a tile completing on one shared
+                           per-slot barrier semaphore (the mbarrier
+                           arrive/expect-tx analogue) instead of per-copy
+                           wait groups.  The consumer posts a single
+                           grouped wait per tile and computes directly in
+                           the landing buffer; the ring always runs at its
+                           deepest issue-ahead (``depth - 1``) because the
+                           mbarrier decouples producer issue from consumer
+                           waits — ``wait_group`` does not apply.
 
 The pipeline *shape* is a first-class value, ``PipelineSpec``:
 
@@ -61,6 +73,7 @@ class Strategy(enum.Enum):
     REGISTER_BYPASS = "register_bypass"
     OVERLAP = "overlap"
     DROP_OFF = "drop_off"
+    TMA = "tma"
 
 
 ALL_STRATEGIES: Tuple[Strategy, ...] = tuple(Strategy)
@@ -120,10 +133,14 @@ class PipelineSpec:
     @property
     def ahead(self) -> int:
         """Issue-ahead distance A: tile i+A is started before tile i's wait.
-        Equivalently, at most A copies are in flight during compute on i."""
+        Equivalently, at most A copies are in flight during compute on i.
+        TMA always runs at the deepest issue-ahead: its mbarrier counts
+        transaction arrivals per slot, so there is no wait-group axis."""
         if self.strategy in _SINGLE_BUFFERED:
             return 0
         limit = self.ring_depth - 1
+        if self.strategy is Strategy.TMA:
+            return limit
         return limit if self.wait_group is None \
             else max(0, min(self.wait_group, limit))
 
@@ -316,15 +333,63 @@ def emit_drop_off(streams: Sequence[TileStream], n_tiles: int,
     jax.lax.fori_loop(0, n_tiles, body, ())
 
 
+def emit_tma(streams: Sequence[TileStream], n_tiles: int,
+             compute: Callable, *, depth: int):
+    """Hopper-TMA analogue: bulk descriptor copies completing on a shared
+    per-slot barrier.
+
+    Every operand tile moves as one 1D/2D bulk copy (the TileStream slice is
+    the copy descriptor), and *all* operands of tile ``i`` signal the same
+    per-slot semaphore — the mbarrier ``expect-tx`` pattern: the consumer
+    posts one grouped wait of ``len(streams)`` arrivals instead of one wait
+    per copy, then computes directly in the landing buffer (register-
+    bypassing, like ``cp.async``, but descriptor-issued from a single
+    producer).  Because the barrier decouples issue from consumption, the
+    ring always runs at its deepest issue-ahead ``depth - 1``; there is no
+    wait-group axis (``PipelineSpec.wait_group`` is ignored).
+
+    ``streams[0].sem`` serves as the slot barrier array; the other streams'
+    semaphores are left untouched so kernel scratch arity stays identical
+    across strategies.
+    """
+    assert depth >= 2, "tma needs a ring buffer of depth >= 2"
+    bar = streams[0].sem            # per-slot transaction barrier (mbarrier)
+
+    def bulk_copy(s: TileStream, i, slot):
+        return pltpu.make_async_copy(
+            s.hbm.at[s.index(i)], s.vmem.at[slot], bar.at[slot])
+
+    ahead = depth - 1
+    for j in range(ahead):
+        @_when(j < n_tiles)
+        def _(j=j):
+            for s in streams:
+                bulk_copy(s, _warm_idx(j, n_tiles), j % depth).start()
+
+    def body(i, _):
+        slot = _slot(i, depth)
+        nxt = _slot(i + ahead, depth)
+        @pl.when(i + ahead < n_tiles)
+        def _():
+            for s in streams:
+                bulk_copy(s, i + ahead, nxt).start()
+        # the grouped mbarrier wait: one arrival per operand bulk copy
+        for s in streams:
+            bulk_copy(s, i, slot).wait()
+        compute(i, [s.vmem.at[slot] for s in streams])
+        return ()
+    jax.lax.fori_loop(0, n_tiles, body, ())
+
+
 def emit(spec: Union[PipelineSpec, Strategy], streams: Sequence[TileStream],
          n_tiles: int, compute: Callable, *, depth: int = 2,
          staging: Optional[Sequence[Any]] = None):
     """Dispatch a loop under the requested pipeline spec (or bare Strategy,
     in which case ``depth`` applies and wait_group defaults).
 
-    ``compute(i, bufs)`` gets VMEM refs for SYNC/REGISTER_BYPASS/OVERLAP and
-    jnp values for DROP_OFF (register semantics).  ``staging`` is consumed
-    only by SYNC (the register-round-trip model) and may be passed
+    ``compute(i, bufs)`` gets VMEM refs for SYNC/REGISTER_BYPASS/OVERLAP/TMA
+    and jnp values for DROP_OFF (register semantics).  ``staging`` is
+    consumed only by SYNC (the register-round-trip model) and may be passed
     unconditionally.
     """
     spec = as_spec(spec, depth=depth)
@@ -338,6 +403,8 @@ def emit(spec: Union[PipelineSpec, Strategy], streams: Sequence[TileStream],
     elif spec.strategy == Strategy.DROP_OFF:
         emit_drop_off(streams, n_tiles, compute, depth=spec.ring_depth,
                       wait_group=spec.wait_group)
+    elif spec.strategy == Strategy.TMA:
+        emit_tma(streams, n_tiles, compute, depth=spec.ring_depth)
     else:  # pragma: no cover
         raise ValueError(spec.strategy)
 

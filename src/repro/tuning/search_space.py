@@ -40,6 +40,17 @@ ISSUE_S = 1e-6
 #: copies in flight and recovers bandwidth, at the cost of a longer fill.
 DMA_LATENCY_S = 2e-6
 
+#: TMA cost terms (Hopper microbenchmark papers, arXiv:2402.13499 /
+#: 2501.12084): a single bulk tensor copy has *higher* per-transaction
+#: latency than a cp.async group (descriptor parse + mbarrier arrive), but
+#: it is issued once by one producer — the per-tile issue overhead is a
+#: fraction of the per-copy ISSUE_S a cp.async-style loop pays — and a bulk
+#: 2D transaction sustains near-peak HBM bandwidth once the ring covers the
+#: latency.
+TMA_LATENCY_S = 3e-6
+TMA_ISSUE_S = 0.25e-6
+TMA_BULK_BW_FRAC = 0.93
+
 
 def issue_ahead(depth: int, wait_group: Optional[int]) -> int:
     """Issue-ahead distance A for a (depth, wait_group) pipeline shape:
@@ -64,6 +75,12 @@ def predict_time(strategy: Strategy, flops: float, nbytes: float, *,
                      saturates at 1, after which the longer fill only hurts
     drop_off:        same pipeline law at chunk granularity (tile/4), plus
                      chunked issue overhead
+    tma:             bulk-copy pipeline at the deepest issue-ahead
+                     (depth - 1; the mbarrier has no wait-group axis):
+                     max(t_m / bw_frac, t_c) + fill, with the Little's-law
+                     fraction against the *higher* TMA per-transaction
+                     latency, capped at TMA_BULK_BW_FRAC of peak, and the
+                     much smaller single-producer descriptor issue cost
     """
     chip = chip or hardware.TARGET
     t_c = flops / (chip.tflops_f32 * 1e12)
@@ -74,6 +91,13 @@ def predict_time(strategy: Strategy, flops: float, nbytes: float, *,
         return t_m * 1.5 + t_c + issue
     if strategy == Strategy.REGISTER_BYPASS:
         return t_m + t_c + issue
+    if strategy == Strategy.TMA:
+        ahead = max(depth, 2) - 1       # mbarrier: always the deepest ahead
+        t_tile = t_m / n_tiles
+        bw_frac = TMA_BULK_BW_FRAC * min(
+            1.0, ahead * t_tile / (TMA_LATENCY_S + t_tile))
+        fill = ahead * t_tile + TMA_LATENCY_S
+        return max(t_m / bw_frac, t_c) + fill + TMA_ISSUE_S * n_tiles
     ahead = issue_ahead(depth, wait_group)
     t_tile = t_m / n_tiles
     if strategy == Strategy.OVERLAP:
@@ -130,9 +154,15 @@ def strategy_depth_waits(strategy: Strategy
     depth 2 that is the only distinct shape (wait_group 1 == None); deeper
     rings add a shallow-wait variant (wait for tile i with only 1 copy in
     flight) — the ``cp.async.wait_group N`` axis where buffering and
-    synchronisation depth decouple."""
+    synchronisation depth decouple.
+
+    TMA has no wait-group axis at all: the per-slot mbarrier tracks every
+    outstanding byte of its slot, so the only shape parameter is the ring
+    depth (issue-ahead is always depth - 1)."""
     if strategy in (Strategy.SYNC, Strategy.REGISTER_BYPASS):
         return ((2, None),)
+    if strategy is Strategy.TMA:
+        return tuple((d, None) for d in strategy_depths(strategy))
     out = []
     for d in strategy_depths(strategy):
         out.append((d, None))
@@ -504,7 +534,8 @@ class SearchSpace:
         for c in cands:
             if not c.feasible:
                 continue
-            if c.config["strategy"] in (Strategy.OVERLAP, Strategy.DROP_OFF):
+            if c.config["strategy"] in (Strategy.OVERLAP, Strategy.DROP_OFF,
+                                        Strategy.TMA):
                 ahead = issue_ahead(c.config["depth"],
                                     c.config.get("wait_group"))
                 n = max(self.spec.n_tiles(self.shape, c.config), 1)

@@ -92,12 +92,24 @@ def test_scratch_for_staging_only_for_sync():
     tile = (8, 128)
     _, _, stage = scratch_for(Strategy.SYNC, tile, jnp.float32)
     assert stage.shape == tile
-    for s in (Strategy.REGISTER_BYPASS, Strategy.OVERLAP, Strategy.DROP_OFF):
+    for s in (Strategy.REGISTER_BYPASS, Strategy.OVERLAP, Strategy.DROP_OFF,
+              Strategy.TMA):
         ring, sems, stage = scratch_for(
             PipelineSpec(strategy=s, depth=3), tile, jnp.float32)
         assert stage.shape == (1, 1)
         expect = 1 if s is Strategy.REGISTER_BYPASS else 3
         assert ring.shape == (expect, *tile)
+
+
+def test_tma_ahead_ignores_wait_group():
+    """TMA's mbarrier tracks every outstanding byte of its slot, so the
+    wait-group axis collapses: issue-ahead is always depth - 1."""
+    assert PipelineSpec(strategy=Strategy.TMA, depth=4).ahead == 3
+    assert PipelineSpec(strategy=Strategy.TMA, depth=4, wait_group=1).ahead \
+        == 3
+    assert PipelineSpec(strategy=Strategy.TMA, depth=3, wait_group=0).ahead \
+        == 2
+    assert PipelineSpec(strategy=Strategy.TMA, depth=4).ring_depth == 4
 
 
 # --- the streaming harness --------------------------------------------------
@@ -170,7 +182,8 @@ def test_every_strategy_handles_empty_and_short_streams(strategy, n_tiles):
     run_pipeline(PipelineSpec(strategy=strategy, depth=3), n_tiles)
 
 
-@pytest.mark.parametrize("strategy", [Strategy.OVERLAP, Strategy.DROP_OFF])
+@pytest.mark.parametrize("strategy", [Strategy.OVERLAP, Strategy.DROP_OFF,
+                                      Strategy.TMA])
 @pytest.mark.parametrize("n_tiles", [1, 3])
 def test_async_n_tiles_at_or_below_depth(strategy, n_tiles):
     """n_tiles <= depth: the warm-up must not issue (or even trace) a copy
@@ -191,7 +204,16 @@ def test_wait_group_zero_degenerates_to_no_overlap(strategy):
     run_pipeline(PipelineSpec(strategy=strategy, depth=3, wait_group=0), 3)
 
 
-@pytest.mark.parametrize("strategy", [Strategy.OVERLAP, Strategy.DROP_OFF])
+@pytest.mark.parametrize("depth", [2, 4])
+def test_tma_deep_ring_streams_exactly(depth):
+    """Bulk-copy rings: the shared per-slot barrier must pair each wait with
+    exactly its slot's arrivals across a stream longer than the ring."""
+    run_pipeline(PipelineSpec(strategy=Strategy.TMA, depth=depth,
+                              out_depth=3), 8)
+
+
+@pytest.mark.parametrize("strategy", [Strategy.OVERLAP, Strategy.DROP_OFF,
+                                      Strategy.TMA])
 @pytest.mark.parametrize("n_tiles", [2, 5])
 def test_traced_n_tiles(strategy, n_tiles):
     """A runtime tile count (flash attention's causal hi-lo) with a ring

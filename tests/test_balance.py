@@ -1,12 +1,18 @@
 """Machine-balance tests promised by core/balance.py: the paper's §6
-expectation model and Fig. 1 balance derivations over the Table 1 lineage."""
+expectation model and Fig. 1 balance derivations over the Table 1 lineage —
+now extended past Ampere into Hopper — plus the chip-catalog invariants the
+lineage validation (repro.bench.lineage) relies on."""
+import inspect
 import math
 
 import pytest
 
 from repro.core import balance, hardware
+from repro.core.async_pipeline import Strategy, parse_strategy
 
-DATACENTER_LINEAGE = ["K80", "P100", "V100", "A100"]
+#: the full datacenter arc, Hopper included (hardware.DATACENTER_LINEAGE);
+#: a module alias so each assertion below reads at paper granularity
+DATACENTER_LINEAGE = list(hardware.DATACENTER_LINEAGE)
 
 
 def test_v100_to_a100_expected_speedup_is_bw_bound():
@@ -84,3 +90,93 @@ def test_density_increases_kepler_to_ampere():
     a100 = balance.machine_balance(hardware.get_chip("A100"))
     assert a100.density_f32 > 3 * k80.density_f32
     assert not math.isnan(k80.density_f64)
+
+
+# --- chip-catalog invariants (the lineage validation's substrate) -----------
+
+
+def test_catalog_names_unique_and_rates_positive():
+    """CATALOG is keyed by name, so a duplicated row would silently shadow;
+    and every chip must carry positive bandwidth/f32 peaks (the two ratios
+    every expectation is built from)."""
+    rows = hardware.GPUS + hardware.HOPPER + hardware.TPUS
+    assert len({c.name for c in rows}) == len(rows)
+    assert set(hardware.CATALOG) == {c.name for c in rows}
+    for chip in hardware.CATALOG.values():
+        assert chip.mem_bw_gbs > 0, chip.name
+        assert chip.tflops_f32 > 0, chip.name
+        assert chip.tflops_f64 >= 0, chip.name
+
+
+def test_expected_speedup_identity_for_every_chip():
+    for chip in hardware.CATALOG.values():
+        assert balance.expected_speedup(chip, chip) == 1.0
+
+
+def test_datacenter_lineage_extends_through_hopper():
+    """The committed arc is K80→P100→V100→A100→H100-SXM: every name resolves,
+    every generation strictly raises both roofline ceilings (which is why
+    H200 — equal peak FLOPs to H100-SXM — is a pair, not a lineage step)."""
+    assert DATACENTER_LINEAGE == ["K80", "P100", "V100", "A100", "H100-SXM"]
+    chips = [hardware.get_chip(n) for n in DATACENTER_LINEAGE]
+    for old, new in zip(chips, chips[1:]):
+        assert new.mem_bw_gbs > old.mem_bw_gbs, (old.name, new.name)
+        assert new.tflops_f32 > old.tflops_f32, (old.name, new.name)
+        assert balance.expected_speedup(old, new) > 1.0
+    for chip in chips:
+        assert chip.grade == "datacenter"
+
+
+def test_a100_to_h100_expectation_matches_published():
+    """The tentpole's predictive claim: A100→H100-SXM is bandwidth-bound at
+    ~2.16x (HBM3/HBM2e), not the 3.43x FLOP ratio."""
+    exp = balance.expect_speedup(hardware.get_chip("A100"),
+                                 hardware.get_chip("H100-SXM"))
+    assert exp.binds == "bandwidth"
+    assert exp.expected == pytest.approx(2.156, abs=0.01)
+    assert exp.flop_ratio == pytest.approx(3.43, abs=0.01)
+
+
+def test_expected_speedup_f64_raises_for_chips_without_f64():
+    """The old silent inf/nan: TPUs carry tflops_f64=0.0 sentinels, so an
+    f64 ratio against them is undefined and must raise, not propagate."""
+    k80 = hardware.get_chip("K80")
+    v5e = hardware.get_chip("TPUv5e")
+    v5p = hardware.get_chip("TPUv5p")
+    with pytest.raises(ValueError, match="no f64 units"):
+        balance.expected_speedup(k80, v5e, precision="f64")   # old: inf
+    with pytest.raises(ValueError, match="no f64 units"):
+        balance.expected_speedup(v5e, k80, precision="f64")
+    with pytest.raises(ValueError, match="no f64 units"):
+        balance.expected_speedup(v5e, v5p, precision="f64")   # old: nan
+    with pytest.raises(ValueError, match="unknown precision"):
+        balance.expected_speedup(k80, v5e, precision="f16")
+    with pytest.raises(ValueError, match="no f64 units"):
+        balance.roofline_time(1.0, 1.0, v5e, precision="f64")
+
+
+def test_machine_balance_f64_and_density_nan_for_sentinels():
+    """machine_balance's contract matches: NaN (rendered "n/a"), never a
+    number derived from a 0.0 sentinel."""
+    v5e = balance.machine_balance(hardware.get_chip("TPUv5e"))
+    assert math.isnan(v5e.bf_f64)           # no f64 units
+    assert math.isnan(v5e.density_f32)      # die area unpublished
+    assert math.isnan(v5e.density_f64)
+    h100 = balance.machine_balance(hardware.get_chip("H100-SXM"))
+    assert not math.isnan(h100.bf_f64)
+    assert not math.isnan(h100.density_f32)
+
+
+def test_lineage_table_signature_takes_no_precision():
+    """Regression pin for the satellite fix: lineage_table() once accepted
+    (and silently ignored) a precision parameter."""
+    assert list(inspect.signature(balance.lineage_table).parameters) == []
+    table = balance.lineage_table()
+    assert set(table) == set(hardware.CATALOG)
+
+
+def test_parse_strategy_round_trips_every_strategy_incl_tma():
+    assert parse_strategy("tma") is Strategy.TMA
+    for s in Strategy:
+        assert parse_strategy(s.value) is s
+        assert parse_strategy(s.value.upper()) is s

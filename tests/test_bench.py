@@ -369,18 +369,25 @@ def _regime_row(strategy, us, depth=2, kernel="stream", **kw):
 
 
 def test_regime_scenarios_registered_for_every_kernel():
-    """The depth-sweep family: one sync baseline + one async strategy at
-    each ring depth, per kernel."""
+    """The depth-sweep family: one sync baseline + the kernel's best async
+    strategy AND the TMA bulk-copy strategy at each ring depth, per
+    kernel."""
     regime = scenarios(tag="regime")
     assert {s.kernel for s in regime} == set(scenario_mod.KERNELS)
     for kernel in scenario_mod.KERNELS:
         cells = [s for s in regime if s.kernel == kernel]
-        assert len(cells) == 4              # sync + d2 + d3 + d4
+        assert len(cells) == 7              # sync + 2 strategies x d2/d3/d4
         syncs = [s for s in cells if s.strategy is Strategy.SYNC]
         assert len(syncs) == 1 and not syncs[0].config.get("depth")
-        depths = sorted(s.config["depth"] for s in cells
-                        if s.strategy is not Strategy.SYNC)
-        assert depths == [2, 3, 4]
+        by_strategy = {}
+        for s in cells:
+            if s.strategy is not Strategy.SYNC:
+                by_strategy.setdefault(s.strategy, []).append(
+                    s.config["depth"])
+        assert Strategy.TMA in by_strategy
+        assert len(by_strategy) == 2        # best-async + tma
+        for depths in by_strategy.values():
+            assert sorted(depths) == [2, 3, 4]
         assert all(s.section == "regime" for s in cells)
 
 
@@ -425,9 +432,10 @@ def test_regime_rows_verdicts_and_break_even():
 
 def test_sweep_appends_regime_verdicts(tmp_path):
     """An end-to-end depth sweep over one kernel's regime cells must yield
-    the 4 measured rows, the projections, and exactly one verdict row."""
+    the measured rows (sync + overlap/tma x 3 depths), the projections,
+    and exactly one verdict row (min across async strategies per depth)."""
     scs = scenarios(tag="regime", kernel="stream")
-    assert len(scs) == 4
+    assert len(scs) == 7
     opts = runner.RunOptions(warmup=0, repeats=1,
                              registry=Registry(str(tmp_path / "reg.json")))
     report = runner.sweep(scs, chips=["TPUv5e"], opts=opts)

@@ -1,0 +1,136 @@
+"""Lineage validation tests: the committed Hopper reference table against
+the live catalog (the CI gate must pass from a clean checkout), the verdict
+banding logic, reference-table schema rejection, and the CLI exit codes."""
+import json
+import os
+
+import pytest
+
+from repro.bench import cli, lineage
+from repro.core import hardware
+
+REF = lineage.default_reference_path()
+
+
+# --- the committed reference table ------------------------------------------
+
+def test_committed_reference_loads_and_validates_within_band():
+    """The acceptance loop: every committed published pair — the paper's
+    K80→A100 Table-1 expectations and the Luo et al. Hopper numbers — is
+    reproduced by the catalog within its band."""
+    pairs = lineage.load_reference(REF)
+    assert len(pairs) >= 6
+    names = {(p.old, p.new, p.precision) for p in pairs}
+    assert ("K80", "P100", "f32") in names
+    assert ("V100", "A100", "f32") in names
+    assert ("A100", "H100-SXM", "f32") in names
+    verdicts = lineage.validate(pairs)
+    assert all(v.verdict == "within-band" for v in verdicts), [
+        (v.old, v.new, v.precision, v.verdict, v.rel_dev) for v in verdicts
+        if v.verdict != "within-band"]
+    doc = lineage.to_doc(verdicts)
+    assert doc["ok"] is True
+    assert doc["counts"]["within-band"] == len(pairs)
+
+
+def test_a100_to_h100_pair_is_bandwidth_bound_in_reference():
+    verdicts = lineage.validate(lineage.load_reference(REF))
+    sxm = [v for v in verdicts
+           if (v.old, v.new, v.precision) == ("A100", "H100-SXM", "f32")]
+    assert len(sxm) == 1
+    assert sxm[0].binds == "bandwidth"
+    assert sxm[0].expected == pytest.approx(2.156, abs=0.01)
+
+
+# --- banding / verdict logic ------------------------------------------------
+
+def _pair(published, band=0.05, old="V100", new="A100"):
+    return lineage.LineagePair(old=old, new=new, published=published,
+                               band=band)
+
+
+def test_verdict_banding_over_under_within():
+    # catalog V100→A100 expectation is ~1.379
+    within, = lineage.validate([_pair(1.38)])
+    assert within.verdict == "within-band" and within.ok
+    under, = lineage.validate([_pair(2.0)])       # catalog predicts less
+    assert under.verdict == "under" and not under.ok
+    over, = lineage.validate([_pair(1.0)])        # catalog predicts more
+    assert over.verdict == "over" and not over.ok
+    doc = lineage.to_doc([within, under, over])
+    assert doc["ok"] is False
+    assert doc["counts"] == {"within-band": 1, "over": 1, "under": 1}
+
+
+def test_band_edges_judge_deviation_not_direction():
+    from repro.core import balance
+    expected = balance.expected_speedup(hardware.get_chip("V100"),
+                                        hardware.get_chip("A100"))
+    just_in, = lineage.validate([_pair(expected / 1.04, band=0.05)])
+    assert just_in.verdict == "within-band"       # +4% dev inside ±5%
+    just_out, = lineage.validate([_pair(expected / 1.06, band=0.05)])
+    assert just_out.verdict == "over"             # +6% dev outside ±5%
+    low_out, = lineage.validate([_pair(expected * 1.06, band=0.05)])
+    assert low_out.verdict == "under"
+
+
+def test_lineage_chain_walks_datacenter_arc():
+    chain = lineage.lineage_chain()
+    hops = [(v.old, v.new) for v in chain]
+    arc = hardware.DATACENTER_LINEAGE
+    assert hops == list(zip(arc, arc[1:]))
+    assert all(v.verdict == "expected" for v in chain)
+    assert all(v.expected > 1.0 for v in chain)
+
+
+# --- reference-table hygiene ------------------------------------------------
+
+def test_reference_rejects_wrong_kind_schema_and_unknown_chip(tmp_path):
+    base = json.load(open(REF))
+
+    def write(doc):
+        p = tmp_path / "ref.json"
+        p.write_text(json.dumps(doc))
+        return str(p)
+
+    with pytest.raises(ValueError, match="kind"):
+        lineage.load_reference(write({**base, "kind": "bench-report"}))
+    with pytest.raises(ValueError, match="schema"):
+        lineage.load_reference(write({**base, "schema": 99}))
+    bogus = dict(base)
+    bogus["pairs"] = [{"old": "K80", "new": "H100-SXMM",
+                       "published": 2.0, "band": 0.1}]
+    with pytest.raises(ValueError, match="unknown chip"):
+        lineage.load_reference(write(bogus))
+    with pytest.raises(ValueError, match="no pairs"):
+        lineage.load_reference(write({**base, "pairs": []}))
+
+
+# --- CLI gate ---------------------------------------------------------------
+
+def test_cli_lineage_gate_passes_and_writes_doc(tmp_path, capsys):
+    out = str(tmp_path / "LINEAGE.json")
+    rc = cli.main(["lineage", "--json", out])
+    assert rc == 0
+    doc = json.load(open(out))
+    assert doc["kind"] == "lineage-validation"
+    assert doc["ok"] is True
+    assert doc["chain"], "chain rows feed the make_report arc table"
+    assert "within-band" in capsys.readouterr().out
+
+
+def test_cli_lineage_gate_fails_on_drifted_reference(tmp_path, capsys):
+    base = json.load(open(REF))
+    base["pairs"][0]["published"] = 10.0          # catalog can't reach this
+    drifted = tmp_path / "drifted.json"
+    drifted.write_text(json.dumps(base))
+    rc = cli.main(["lineage", "--reference", str(drifted)])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "drifted" in err or "under" in err
+
+
+def test_cli_lineage_missing_reference_is_a_usage_error(tmp_path, capsys):
+    rc = cli.main(["lineage", "--reference",
+                   str(tmp_path / "nope.json")])
+    assert rc == 2

@@ -202,6 +202,47 @@ def test_search_space_covers_depth_and_wait_group_axes():
     assert deep != shallow
 
 
+def test_tma_search_space_has_no_wait_group_axis():
+    """TMA's mbarrier completion has no partial-wait analogue, so the
+    enumeration carries only the depth axis — and the autotuner codec
+    round-trips the new strategy name."""
+    from repro.tuning import strategy_depth_waits
+    assert strategy_depth_waits(Strategy.TMA) == ((2, None), (3, None),
+                                                  (4, None))
+    cands = SearchSpace("stream", (512, 256)).candidates()
+    tma = [c for c in cands if c.config["strategy"] is Strategy.TMA]
+    assert tma, "TMA candidates must be enumerated"
+    assert {c.config["wait_group"] for c in tma} == {None}
+    assert {c.config["depth"] for c in tma} == {2, 3, 4}
+    cfg = decode_config({"strategy": "tma", "depth": 3, "tile_rows": 8,
+                         "n_tiles": 4})
+    assert cfg["strategy"] is Strategy.TMA
+
+
+def test_tma_predict_time_amortizes_latency_with_depth():
+    """The TMA cost term behaves like the papers describe: a deeper ring
+    recovers bulk bandwidth (hiding the higher per-transaction latency),
+    and per-tile issue cost is cheaper than the cp.async-style loop."""
+    nbytes, n = 2.1e8, 64             # ~4us tiles: TMA's sweet spot
+    flops = 0.1 * (nbytes / 819e9) * 197e12          # memory-bound
+    t2 = predict_time(Strategy.TMA, flops, nbytes, depth=2, n_tiles=n)
+    t4 = predict_time(Strategy.TMA, flops, nbytes, depth=4, n_tiles=n)
+    assert t4 < t2                     # deeper ring covers TMA_LATENCY_S
+    # wait_group must not perturb the TMA prediction (no such axis)
+    assert predict_time(Strategy.TMA, flops, nbytes, depth=4, n_tiles=n,
+                        wait_group=1) == t4
+    # where per-copy issue overhead dominates, the single-descriptor bulk
+    # path beats the cp.async-style overlap loop...
+    t_overlap = predict_time(Strategy.OVERLAP, flops, nbytes, depth=4,
+                             n_tiles=n)
+    assert t4 < t_overlap
+    # ...but at large tiles the 7% bulk-bandwidth cap hands overlap the win
+    # (the regime split the Hopper papers report)
+    big = 1e9
+    assert predict_time(Strategy.OVERLAP, 0.0, big, depth=4, n_tiles=8) < \
+        predict_time(Strategy.TMA, 0.0, big, depth=4, n_tiles=8)
+
+
 def test_predict_time_strategy_ordering():
     """Mixed regime (t_c ~ t_m/2): overlap hides the compute under the DMA
     and wins; sync pays the staging re-pass and loses — paper Fig 3a."""
