@@ -71,11 +71,15 @@ def bench_tables(pattern):
         if serving:
             print("| scenario | scheduler | batch | requests | tok/s "
                   "| ttft p50/p99 (ms) | decode p50/p99 (ms) | occupancy "
-                  "| step us (median) |")
-            print("|---|---|---|---|---|---|---|---|---|")
+                  "| hit ratio | step us (median) |")
+            print("|---|---|---|---|---|---|---|---|---|---|")
             for r in serving:
                 m = r.metrics
                 batch = r.shape[0] if r.shape else "—"
+                # hit ratio exists only on chunked-prefill rows; '—' keeps
+                # monolithic rows distinguishable from a measured 0.00
+                hit = (f"{m['cache_hit_ratio']:.2f}"
+                       if "cache_hit_ratio" in m else "—")
                 print(f"| {r.scenario} | {r.strategy} | {batch} "
                       f"| {m.get('requests', 0):g} "
                       f"| {m.get('tokens_per_s', 0):,.0f} "
@@ -84,6 +88,7 @@ def bench_tables(pattern):
                       f"| {m.get('decode_ms_p50', 0):,.2f} / "
                       f"{m.get('decode_ms_p99', 0):,.2f} "
                       f"| {m.get('occupancy_mean', 0):.2f} "
+                      f"| {hit} "
                       f"| {m.get('us_median', 0):,.1f} |")
             if measured:
                 print()

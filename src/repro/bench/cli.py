@@ -245,7 +245,8 @@ def main(argv=None) -> int:
 
     def add_filters(p):
         p.add_argument("--only", default=None,
-                       help="substring filter over scenario names")
+                       help="substring filter over scenario names; "
+                            "comma-separates alternatives (OR)")
         p.add_argument("--kernel", choices=scenario.KERNELS, default=None)
         p.add_argument("--strategy", default=None,
                        help="async strategy filter "

@@ -43,7 +43,9 @@ def _trace_requests(w: Dict[str, Any], vocab: int):
         vocab=vocab, rate=float(w.get("rate", 0.5)),
         burst=int(w.get("burst", 4)), seed=int(w.get("seed", 0)),
         prompt_lens=tuple(w.get("prompt_lens", (5, 16))),
-        max_new=tuple(w.get("max_new", (4, 8))))
+        max_new=tuple(w.get("max_new", (4, 8))),
+        prefix_len=int(w.get("prefix_len", 0)),
+        prefix_group=int(w.get("prefix_group", 0)))
 
 
 def run_serve_scenario(sc: ServeScenario, opts=None) -> BenchResult:
@@ -60,29 +62,46 @@ def run_serve_scenario(sc: ServeScenario, opts=None) -> BenchResult:
     model = build_model(cfg)
     params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
 
+    from ..serve import next_pow2
     trace = _trace_requests(w, cfg.vocab)
-    max_new_hi = max(len(r.prompt) for r in trace) \
-        + max(r.max_new for r in trace)
-    loop = ServingLoop(
-        cfg, params, batch=int(w.get("batch", 2)),
-        seed=int(w.get("seed", 0)), max_new=max(r.max_new for r in trace),
-        scheduler=w.get("scheduler", "continuous"),
-        block_len=int(w.get("block_len", 8)),
-        max_seq=max_new_hi + int(w.get("block_len", 8)))
+    # monolithic prefill books max(next_pow2(prompt), prompt + max_new)
+    # rows per slot, so the per-slot cap must cover the pow2 bucket of the
+    # longest prompt (shared-prefix prompts push past the next boundary)
+    max_new_hi = max(max(next_pow2(len(r.prompt)),
+                         len(r.prompt) + r.max_new) for r in trace)
 
-    def replay(requests):
-        return loop.run(requests, temperature=0.0)
+    def build_loop(prefix_cache, chunk_tokens=None):
+        return ServingLoop(
+            cfg, params, batch=int(w.get("batch", 2)),
+            seed=int(w.get("seed", 0)),
+            max_new=max(r.max_new for r in trace),
+            scheduler=w.get("scheduler", "continuous"),
+            block_len=int(w.get("block_len", 8)),
+            max_seq=max_new_hi + int(w.get("block_len", 8)),
+            chunk_tokens=(w.get("chunk_tokens") if chunk_tokens is None
+                          else chunk_tokens),
+            prefix_cache=prefix_cache)
+
+    loop = build_loop(bool(w.get("prefix_cache", False)))
+
+    def replay(requests, lp=None):
+        return (lp or loop).run(requests, temperature=0.0)
 
     def fresh():
         return [Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
                         arrival=r.arrival) for r in trace]
 
+    cache = getattr(loop.scheduler, "cache", None)
     with get_tracer().span(f"scenario:{sc.name}",
                            scheduler=w.get("scheduler", "continuous"),
                            arrival=w.get("arrival", "uniform"),
                            n_requests=len(trace)) as span:
         with get_tracer().span("serve.warmup"):
             replay(fresh())                 # compiles every shape
+        if cache is not None and loop.prefix_cache:
+            # forget warmup's retained blocks: the measured replay's hit
+            # ratio must reflect a cold start, not a pre-seeded cache
+            cache.reset_prefix_cache()
         measured = obs_metrics.Registry()
         loop.scheduler.metrics = measured   # fresh counters for the run
         t0 = time.perf_counter()
@@ -110,6 +129,25 @@ def run_serve_scenario(sc: ServeScenario, opts=None) -> BenchResult:
             "requests": snap.get("serve.requests_total", {}).get("value", 0),
             "tokens": n_tokens,
         }
+        if loop.chunk_tokens is not None and cache is not None:
+            metrics["cache_hit_ratio"] = cache.cache_hit_ratio
+            metrics["prefix_hit_tokens"] = cache.hit_tokens
+            metrics["prefix_miss_tokens"] = cache.miss_tokens
+        if w.get("check_outputs") and loop.prefix_cache:
+            # greedy outputs must be bit-identical with sharing disabled:
+            # replay the same trace through a fresh non-sharing chunked
+            # loop (same chunk settings) and compare token-for-token
+            ref_loop = build_loop(False, chunk_tokens=loop.chunk_tokens)
+            ref = replay(fresh(), ref_loop)
+            equal = (set(ref) == set(results)
+                     and all(ref[u] == results[u] for u in ref))
+            metrics["outputs_equal"] = bool(equal)
+            if not equal:
+                diff = [u for u in results
+                        if ref.get(u) != results.get(u)]
+                raise RuntimeError(
+                    f"{sc.name}: prefix sharing changed greedy outputs "
+                    f"for requests {diff[:8]}")
         if span is not None:
             span.attrs["us_median"] = metrics["us_median"]
             span.attrs["tokens_per_s"] = metrics["tokens_per_s"]

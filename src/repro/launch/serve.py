@@ -54,18 +54,30 @@ class ServingLoop:
                  rules=None, seed: int = 0, max_new: int = 64,
                  metrics: Optional[obs_metrics.Registry] = None,
                  scheduler: str = "continuous", block_len: int = 16,
-                 max_seq: int = 1024, total_tokens: Optional[int] = None):
+                 max_seq: int = 1024, total_tokens: Optional[int] = None,
+                 chunk_tokens: Optional[int] = None,
+                 prefix_cache: bool = False):
         if scheduler not in ("continuous", "cohort"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if scheduler == "continuous" and build_model(cfg).decode_paged is None:
             log.info("family %s has no paged decode path; falling back to "
                      "cohort scheduling", cfg.family)
             scheduler = "cohort"
+        if scheduler != "continuous" and (chunk_tokens or prefix_cache):
+            log.info("chunked prefill / prefix caching need the continuous "
+                     "scheduler; disabling both")
+            chunk_tokens, prefix_cache = None, False
+        if (chunk_tokens or prefix_cache) and int(cfg.n_patches or 0) > 0:
+            log.info("family %s prepends patch rows during prefill, which "
+                     "chunked prefill cannot align; disabling chunked "
+                     "prefill / prefix caching", cfg.family)
+            chunk_tokens, prefix_cache = None, False
         if scheduler == "continuous":
             self.scheduler = ContinuousScheduler(
                 cfg, params, batch=batch, rules=rules, seed=seed,
                 max_new=max_new, metrics=metrics, block_len=block_len,
-                max_seq=max_seq, total_tokens=total_tokens)
+                max_seq=max_seq, total_tokens=total_tokens,
+                chunk_tokens=chunk_tokens, prefix_cache=prefix_cache)
         else:
             self.scheduler = CohortScheduler(
                 cfg, params, batch=batch, rules=rules, seed=seed,
@@ -73,6 +85,8 @@ class ServingLoop:
         self.cfg = cfg
         self.batch = batch
         self.scheduler_kind = scheduler
+        self.chunk_tokens = chunk_tokens
+        self.prefix_cache = prefix_cache
 
     @property
     def metrics(self) -> obs_metrics.Registry:
@@ -100,6 +114,21 @@ def main(argv=None):
                          "legacy static-cohort loop")
     ap.add_argument("--block-len", type=int, default=16,
                     help="paged KV cache block length (continuous only)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="split prefill into chunks of this many tokens "
+                         "interleaved with decode steps (continuous only; "
+                         "must be a multiple of --block-len)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-address full KV blocks and share cached "
+                         "prompt prefixes across requests (implies chunked "
+                         "prefill at 4 * --block-len unless --chunk-tokens "
+                         "is given)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared-prefix traces: give arrival-trace prompts "
+                         "a common random prefix of this many tokens")
+    ap.add_argument("--prefix-group", type=int, default=0,
+                    help="requests per shared prefix group (default: all "
+                         "requests share one prefix)")
     ap.add_argument("--arrival", default="none",
                     choices=["none"] + list(ARRIVALS),
                     help="arrival trace: 'none' submits every request at "
@@ -134,22 +163,31 @@ def main(argv=None):
     loop = ServingLoop(cfg, params, batch=args.batch, max_new=args.max_new,
                        seed=args.seed, scheduler=args.scheduler,
                        block_len=args.block_len,
-                       max_seq=args.prompt_len + args.max_new + args.block_len)
+                       max_seq=(args.prompt_len + args.prefix_len
+                                + args.max_new + args.block_len),
+                       chunk_tokens=args.chunk_tokens,
+                       prefix_cache=args.prefix_cache)
     if args.arrival == "none":
         rng = np.random.default_rng(args.seed)
         lens = (rng.integers(4, args.prompt_len + 1, args.requests)
                 if args.ragged else [args.prompt_len] * args.requests)
-        reqs = [Request(uid=i,
-                        prompt=rng.integers(0, cfg.vocab,
-                                            (int(lens[i]),)).astype(np.int32),
-                        max_new=args.max_new)
-                for i in range(args.requests)]
+        prefix = (rng.integers(0, cfg.vocab,
+                               (args.prefix_len,)).astype(np.int32)
+                  if args.prefix_len > 0 else None)
+        reqs = []
+        for i in range(args.requests):
+            p = rng.integers(0, cfg.vocab, (int(lens[i]),)).astype(np.int32)
+            if prefix is not None:
+                p = np.concatenate([prefix, p])
+            reqs.append(Request(uid=i, prompt=p, max_new=args.max_new))
     else:
         lo = 4 if args.ragged else args.prompt_len
         reqs = make_trace(args.arrival, args.requests, vocab=cfg.vocab,
                           rate=args.rate, burst=args.burst, seed=args.seed,
                           prompt_lens=(lo, args.prompt_len),
-                          max_new=(args.max_new, args.max_new))
+                          max_new=(args.max_new, args.max_new),
+                          prefix_len=args.prefix_len,
+                          prefix_group=args.prefix_group)
     t0 = time.time()
     results = loop.run(reqs, max_steps=args.max_new)
     dt = time.time() - t0
@@ -158,13 +196,20 @@ def main(argv=None):
     ttft = snap.get(("serve.ttft_ms",), {})
     dec = snap.get(("serve.decode_ms",), {})
     occ = snap.get(("serve.batch_occupancy",), {})
+    hit = ""
+    cache = getattr(loop.scheduler, "cache", None)
+    # the scheduler resolves a default chunk size when only
+    # --prefix-cache is passed, so consult it rather than the CLI value
+    if getattr(loop.scheduler, "chunk_tokens", None) is not None \
+            and cache is not None:
+        hit = f"; cache-hit ratio={cache.cache_hit_ratio:.2f}"
     print(f"[{loop.scheduler_kind}] served {len(results)} requests, "
           f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s); "
           f"ttft p50={ttft.get('p50', 0):.0f}ms "
           f"p99={ttft.get('p99', 0):.0f}ms; "
           f"decode p50={dec.get('p50', 0):.1f}ms/tok "
           f"p99={dec.get('p99', 0):.1f}ms/tok; "
-          f"occupancy mean={occ.get('mean', 0):.2f}")
+          f"occupancy mean={occ.get('mean', 0):.2f}{hit}")
     for r in sorted(reqs, key=lambda r: r.uid):
         print(f"  req {r.uid}: prompt={len(r.prompt)} arrival={r.arrival:.1f} "
               f"ttft={r.ttft_ms:.0f}ms total={r.total_ms:.0f}ms "

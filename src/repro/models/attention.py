@@ -274,6 +274,45 @@ def attend_decode(q, k_cache, v_cache, pos_cache, idx_map, *,
     return out[:, None].astype(q.dtype)                       # (B,1,Hp,hd)
 
 
+def attend_prefix(q, k_cache, v_cache, pos_cache, idx_map, *,
+                  q_positions, window: int = 0,
+                  scale: Optional[float] = None, global_flag=None):
+    """Prefill-chunk attention: C queries per batch row over a cache view.
+
+    q: (B,C,Hp,hd); caches: (B,W,KV,hd); pos_cache: (B,W) absolute
+    positions (-1 empty); q_positions: (B,C) each query's absolute
+    position.  Row c attends cache rows whose position is in
+    [0, q_positions[c]] — which includes the chunk's own rows, written
+    into the cache before this call.
+
+    Deliberately a FULL masked softmax per query (not the online-softmax
+    scan of ``attend_chunked``): every query reduces over the same fixed
+    W regardless of how prefill was chunked, so per-row outputs are
+    bit-identical across chunk sizes and shared-prefix admissions — the
+    property the chunked-prefill equivalence tests pin."""
+    b, c, hp, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = q * jnp.asarray(scale, q.dtype)                      # (B,C,Hp,hd)
+    k_rep = jnp.take(k_cache, idx_map, axis=2)                # (B,W,Hp,hd)
+    v_rep = jnp.take(v_cache, idx_map, axis=2)
+    k_rep = logical(k_rep, "batch", "kvlen", None, None)
+    v_rep = logical(v_rep, "batch", "kvlen", None, None)
+    logits = jnp.einsum("bchd,bwhd->bhcw", qf, k_rep,
+                        preferred_element_type=jnp.float32)
+    mask = (pos_cache[:, None, :] >= 0) \
+        & (pos_cache[:, None, :] <= q_positions[:, :, None])  # (B,C,W)
+    if window > 0:
+        wmask = pos_cache[:, None, :] > (q_positions[:, :, None] - window)
+        if global_flag is not None:
+            wmask = wmask | global_flag
+        mask &= wmask
+    logits = jnp.where(mask[:, None, :, :], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhcw,bwhd->bchd", p.astype(v_rep.dtype), v_rep,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)                                # (B,C,Hp,hd)
+
+
 def attn_out(p, attn_heads, cfg: ArchConfig, compute_dtype):
     b, s = attn_heads.shape[:2]
     flat = attn_heads.reshape(b, s, -1)

@@ -51,6 +51,10 @@ class Model:
     # batching); None for families whose decode state a block arena
     # cannot hold (ssm/hybrid/encdec)
     decode_paged: Optional[Callable] = None
+    # one prefill chunk for a single slot over the block arena (chunked
+    # prefill / prefix sharing); None wherever decode_paged is None, and
+    # also for vlm (patch rows cannot be chunk-aligned)
+    prefill_chunk: Optional[Callable] = None
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -96,6 +100,7 @@ def build_model(cfg: ArchConfig) -> Model:
         return logits[:, -1], state
 
     decode_paged = None
+    prefill_chunk = None
     if cfg.family in tfm.PAGED_FAMILIES:
         def decode_paged(params, paged, tokens, block_table, slot_pos):
             """tokens: (B, 1); block_table: (B, MB); slot_pos: (B,) ->
@@ -103,6 +108,14 @@ def build_model(cfg: ArchConfig) -> Model:
             return tfm.forward_paged_decode(params, cfg, tokens, paged,
                                             block_table, slot_pos)
 
+        if cfg.n_patches == 0:
+            def prefill_chunk(params, paged, tokens, block_table, start,
+                              n_real):
+                """tokens: (1, C); block_table: (1, MB); start/n_real: ()
+                -> (logits (1, vocab_p), new PagedState)."""
+                return tfm.forward_paged_chunk(params, cfg, tokens, paged,
+                                               block_table, start, n_real)
+
     return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
                  decode_step=decode_step, forward=forward,
-                 decode_paged=decode_paged)
+                 decode_paged=decode_paged, prefill_chunk=prefill_chunk)

@@ -634,3 +634,79 @@ def forward_paged_decode(params, cfg: ArchConfig, tokens, paged: PagedState,
         (params["layers"], jnp.arange(L, dtype=jnp.int32)))
     logits = unembed(params, cfg, x)
     return logits[:, -1], PagedState(k=K, v=V, pos=pos_blocks)
+
+
+def forward_paged_chunk(params, cfg: ArchConfig, tokens, paged: PagedState,
+                        block_table, start, n_real):
+    """One prefill CHUNK for a single slot over the block arena.
+
+    tokens: (1, C) int32 — rows ``[0, n_real)`` are the real chunk, the
+    rest is pow2-bucket padding; block_table: (1, MB) the slot's table
+    (-1 = unused); start: () int32 the chunk's first absolute row;
+    n_real: () int32 real-row count (1 <= n_real <= C).  Writes the real
+    rows' K/V into the slot's blocks (pad rows land in scratch block 0
+    with position -1, so they are never attended) and returns
+    (logits of row start+n_real-1, shape (1, vocab_p), new PagedState).
+
+    Numerics: K/V/FFN are per-row and attention goes through
+    ``attend_prefix``'s full masked softmax over the gathered MB*BL view,
+    so row values do not depend on the chunk decomposition — chunked,
+    shared-prefix, and solo prefill agree bit-for-bit (the equivalence
+    tests' anchor).  Note this is a *different* decomposition from the
+    monolithic ``prefill`` path's online-softmax ``attend_chunked``, so
+    chunked mode is only bit-comparable to chunked-mode oracles."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged chunk prefill supports families {PAGED_FAMILIES}, "
+            f"not {cfg.family!r}")
+    cdt = jnp.dtype(cfg.dtype)
+    c = tokens.shape[1]
+    bl = paged.pos.shape[1]
+    mb = block_table.shape[1]
+    offs = jnp.arange(c, dtype=jnp.int32)
+    positions = start + offs                            # (C,)
+    valid = offs < n_real
+    pos_q = positions[None, :]                          # (1, C)
+    x = _embed_inputs(params, cfg, tokens, None, pos_q, cdt)
+
+    # per-row write targets; pad rows clamp to scratch block 0 (their
+    # position row is forced to -1, so last-wins scatter races among pad
+    # rows at (0, 0) are harmless)
+    bt = block_table[0]                                 # (MB,)
+    bidx = jnp.clip(positions // bl, 0, mb - 1)
+    blk = jnp.where(valid, jnp.maximum(bt[bidx], 0), 0)
+    off = jnp.where(valid, positions % bl, 0)
+    pos_blocks = paged.pos.at[blk, off].set(
+        jnp.where(valid, positions, -1))
+
+    hp = padded_heads(cfg)
+    idx_map = attn.kv_index_map(cfg.n_heads, cfg.n_kv_heads, hp)
+    L = cfg.n_layers
+
+    def body(carry, per):
+        x, K, V = carry
+        p_l, i = per
+        k_l = jax.lax.dynamic_index_in_dim(K, i, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(V, i, 0, keepdims=False)
+        h = norm(p_l["ln_attn"], x)
+        q, k_new, v_new = attn.qkv_project(p_l["attn"], h, cfg, pos_q, cdt)
+        k_l = k_l.at[blk, off].set(k_new[0])
+        v_l = v_l.at[blk, off].set(v_new[0])
+        kd, vd, pd = attn.gather_paged_view(k_l, v_l, pos_blocks,
+                                            block_table)
+        out_h = attn.attend_prefix(q, kd, vd, pd, idx_map,
+                                   q_positions=pos_q,
+                                   window=cfg.attn.window)
+        attn_o = attn.attn_out(p_l["attn"], out_h, cfg, cdt)
+        x, aux = _ffn_residual(p_l, x, h, attn_o, cfg, cdt)
+        K = jax.lax.dynamic_update_index_in_dim(K, k_l, i, 0)
+        V = jax.lax.dynamic_update_index_in_dim(V, v_l, i, 0)
+        return (x, K, V), aux
+
+    (x, K, V), _ = jax.lax.scan(
+        body, (x, paged.k, paged.v),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+    x_last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.maximum(n_real - 1, 0), 1, axis=1)       # (1, 1, d)
+    logits = unembed(params, cfg, x_last)
+    return logits[:, -1], PagedState(k=K, v=V, pos=pos_blocks)

@@ -19,6 +19,14 @@ global median ratio before gating, so a uniformly slower/faster *host*
 regressed: only cells that move relative to the rest of their own sweep
 can fail.
 
+Serving cells carry two extra gated metrics beyond ``us_median``, emitted
+as synthetic ``scenario:metric`` rows: ``tokens_per_s`` (higher is
+better, so the verdict is inverted; under ``normalize`` the new value is
+*multiplied* by the host scale, since a uniformly slower host depresses
+throughput by exactly the factor it inflates latencies) and
+``cache_hit_ratio`` (a deterministic scheduling property in [0, 1], gated
+with a small absolute band and never host-normalized).
+
 The verdict rows serialize to an ``obs-compare`` JSON document that
 ``experiments/make_report.py`` renders and CI archives next to the bench
 trajectory.
@@ -47,6 +55,19 @@ DEFAULT_REL_FLOOR = 0.05
 #: IQR ~= 1.349 sigma for a normal distribution — the fallback when a row
 #: carries only ``us_std`` (reports written before raw trials were kept).
 _STD_TO_IQR = 1.349
+
+#: hit ratio is deterministic given the trace, but admission order can
+#: shift a block boundary; allow this much absolute movement before
+#: flagging.
+HIT_RATIO_BAND = 0.02
+
+#: extra per-cell metrics gated as synthetic ``scenario:metric`` rows:
+#: (key, higher_is_better, absolute band or None for rel_floor * base,
+#:  host_scaled).  Cells lacking the key (all kernel rows) are skipped.
+_EXTRA_METRICS = (
+    ("tokens_per_s", True, None, True),
+    ("cache_hit_ratio", True, HIT_RATIO_BAND, False),
+)
 
 
 def _iqr(samples: List[float]) -> float:
@@ -190,6 +211,30 @@ def compare_reports(base: BenchReport, new: BenchReport, *,
             new_us=new_us, adj_new_us=adj_new, band_us=band,
             delta_pct=((adj_new - base_us) / base_us * 100.0
                        if base_us else 0.0)))
+        for key, higher_better, abs_band, scaled in _EXTRA_METRICS:
+            if key not in b.metrics or key not in n.metrics:
+                continue
+            base_v = float(b.metrics[key])
+            new_v = float(n.metrics[key])
+            # a slower host divides throughput where it multiplies time,
+            # so the correction runs the other way for these rows
+            adj_v = new_v * scale if scaled else new_v
+            vband = (abs_band if abs_band is not None
+                     else rel_floor * abs(base_v))
+            lo, hi = base_v - vband, base_v + vband
+            if adj_v < lo:
+                mverdict = "regress" if higher_better else "improve"
+            elif adj_v > hi:
+                mverdict = "improve" if higher_better else "regress"
+            else:
+                mverdict = "pass"
+            verdicts.append(CellVerdict(
+                scenario=f"{b.scenario}:{key}", chip=b.chip,
+                kernel=b.kernel, strategy=n.strategy, verdict=mverdict,
+                base_us=base_v, new_us=new_v, adj_new_us=adj_v,
+                band_us=vband,
+                delta_pct=((adj_v - base_v) / base_v * 100.0
+                           if base_v else 0.0)))
 
     for cell in sorted(set(base_cells) - set(new_cells)):
         b = base_cells[cell]

@@ -5,14 +5,14 @@ entry point (CLI + ``ServingLoop`` wrapper) lives in
 ``repro.launch.serve``; the bench scenario family in
 ``repro.bench.serving``.
 """
-from .cache import PagedKVCache, next_pow2
+from .cache import PagedKVCache, block_hashes, next_pow2
 from .scheduler import (CohortScheduler, ContinuousScheduler, Request,
                         build_serve_fns, mask_padded_cache, pack_prompts,
                         sample)
 from .traces import ARRIVALS, make_trace
 
 __all__ = [
-    "PagedKVCache", "next_pow2",
+    "PagedKVCache", "block_hashes", "next_pow2",
     "CohortScheduler", "ContinuousScheduler", "Request",
     "build_serve_fns", "mask_padded_cache", "pack_prompts", "sample",
     "ARRIVALS", "make_trace",

@@ -153,13 +153,20 @@ class _SchedulerBase:
 class _Slot:
     """One occupied batch slot of the continuous scheduler."""
 
-    __slots__ = ("req", "pos", "target", "t_arrive")
+    __slots__ = ("req", "pos", "target", "t_arrive", "plen", "filled",
+                 "prefilling", "started")
 
-    def __init__(self, req: Request, pos: int, target: int, t_arrive: float):
+    def __init__(self, req: Request, pos: int, target: int, t_arrive: float,
+                 plen: int = 0, filled: int = 0, prefilling: bool = False):
         self.req = req
         self.pos = pos          # next cache row this slot writes
         self.target = target    # tokens to emit (min(max_new, max_steps))
         self.t_arrive = t_arrive
+        # chunked-prefill progress (unused by the monolithic path)
+        self.plen = plen        # prompt rows this slot must prefill
+        self.filled = filled    # prompt rows written so far (chunk-aligned)
+        self.prefilling = prefilling
+        self.started = False    # True once the first chunk dispatched
 
 
 class ContinuousScheduler(_SchedulerBase):
@@ -168,14 +175,32 @@ class ContinuousScheduler(_SchedulerBase):
     ``total_tokens`` sets the arena budget (default: enough for every
     slot to hold ``max_seq`` rows); ``max_seq`` bounds one request's
     prompt + generation; ``max_prefills_per_step`` caps how many arrivals
-    are admitted between decode steps (default: the batch size)."""
+    are admitted between decode steps (default: the batch size).
+
+    ``chunk_tokens`` switches prefill from one monolithic exact-length
+    dispatch to fixed-size chunks interleaved with decode steps (one
+    chunk, then one decode step, per scheduler step), bounding how long
+    a queued long prompt can stall decoders.  Chunk boundaries are
+    *absolute* row multiples of ``chunk_tokens`` and every chunk runs the
+    same full-softmax dispatch shape, so greedy outputs stay bit-identical
+    to a chunked solo oracle regardless of arrival order, batch mix, or
+    prefix sharing (they are NOT bit-comparable to the monolithic path,
+    whose online-softmax decomposition differs in low bits).
+    ``prefix_cache`` additionally content-addresses finished full blocks
+    and admits new prompts by mapping their longest cached prefix —
+    implies chunked prefill (default ``block_len`` — the finest legal
+    chunk, so as much of a shared prefix as possible lands on a match
+    boundary) because shared rows must end on an absolute chunk
+    boundary."""
 
     def __init__(self, cfg: ArchConfig, params, *, batch: int,
                  rules=None, seed: int = 0, max_new: int = 64,
                  metrics: Optional[obs_metrics.Registry] = None,
                  block_len: int = 16, max_seq: int = 1024,
                  total_tokens: Optional[int] = None,
-                 max_prefills_per_step: Optional[int] = None):
+                 max_prefills_per_step: Optional[int] = None,
+                 chunk_tokens: Optional[int] = None,
+                 prefix_cache: bool = False):
         super().__init__(cfg, params, batch=batch, rules=rules, seed=seed,
                          max_new=max_new, metrics=metrics)
         if self.model.decode_paged is None:
@@ -184,13 +209,31 @@ class ContinuousScheduler(_SchedulerBase):
                 "CohortScheduler")
         self.block_len = block_len
         self.max_seq = max_seq
+        if prefix_cache and chunk_tokens is None:
+            # finest legal chunk: match length is capped to chunk
+            # multiples, so coarser defaults silently shrink sharing
+            chunk_tokens = block_len
+        if chunk_tokens is not None:
+            if chunk_tokens < block_len or chunk_tokens % block_len:
+                raise ValueError(
+                    f"chunk_tokens {chunk_tokens} must be a positive "
+                    f"multiple of block_len {block_len}")
+            if int(cfg.n_patches or 0) > 0:
+                raise ValueError(
+                    "chunked prefill does not support vlm prompts (patch "
+                    "rows cannot be chunk-aligned); use the monolithic "
+                    "path")
+        self.chunk_tokens = chunk_tokens
+        self.prefix_cache = bool(prefix_cache)
         if total_tokens is None:
             total_tokens = batch * max_seq
         self.cache = PagedKVCache(cfg, batch, total_tokens=total_tokens,
-                                  max_seq=max_seq, block_len=block_len)
+                                  max_seq=max_seq, block_len=block_len,
+                                  prefix_cache=self.prefix_cache)
         self.max_prefills_per_step = (batch if max_prefills_per_step is None
                                       else max_prefills_per_step)
         self._prefill_fns = {}          # KV bucket -> jitted prefill
+        self._chunk_fns = {}            # pow2 chunk width -> jitted chunk
         # vlm prompts prepend n_patches rows to the cache during prefill
         self._extra_rows = int(cfg.n_patches or 0)
 
@@ -233,6 +276,24 @@ class ContinuousScheduler(_SchedulerBase):
                 prefill_write, donate_argnums=(2,))
         return fn
 
+    def _get_chunk(self, width: int):
+        """Jitted single-slot prefill chunk at pow2 ``width`` (compiles
+        once per width: at most log2(next_pow2(chunk_tokens)) + 1 entries
+        across any trace — the jit-cache-boundedness tests pin this)."""
+        fn = self._chunk_fns.get(width)
+        if fn is None:
+            model, rules = self.model, self.rules
+
+            def chunk_step(params, paged, tokens, table, start, n_real):
+                with shd.use_rules(rules):
+                    logits, paged = model.prefill_chunk(
+                        params, paged, tokens, table, start, n_real)
+                return logits, jnp.argmax(logits, axis=-1), paged
+
+            fn = self._chunk_fns[width] = jax.jit(chunk_step,
+                                                  donate_argnums=(1,))
+        return fn
+
     def _prefill_batch(self, prompt: np.ndarray):
         batch = {"tokens": jnp.asarray(
             np.asarray(prompt, np.int32).reshape(1, -1))}
@@ -245,6 +306,8 @@ class ContinuousScheduler(_SchedulerBase):
 
     def run(self, requests: List[Request], temperature: float = 0.0,
             max_steps: int = 64) -> Dict[int, List[int]]:
+        if self.chunk_tokens is not None:
+            return self._run_chunked(requests, temperature, max_steps)
         tracer = get_tracer()
         ttft_h, dec_h, occ_h, qdepth, req_c, tok_c = self._metric_handles()
         base_key = jax.random.PRNGKey(self.seed)
@@ -351,6 +414,211 @@ class ContinuousScheduler(_SchedulerBase):
                 logits, greedy, self.cache.state = self._decode(
                     self.params, self.cache.state, jnp.asarray(tokens),
                     self.cache.device_tables(), jnp.asarray(slot_pos))
+                if temperature <= 0:
+                    toks = jax.block_until_ready(greedy)
+                else:
+                    toks = np.zeros((self.batch,), np.int64)
+                    for i in active:
+                        s = slots[i]
+                        key = _request_key(base_key, s.req.uid)
+                        step_key = jax.random.fold_in(
+                            key, len(s.req.out_tokens))
+                        toks[i] = int(jax.block_until_ready(sample(
+                            logits[i:i + 1], step_key, temperature))[0])
+            dec_h.observe((time.perf_counter() - t0) * 1e3)
+            clock += 1.0
+            for i in active:
+                s = slots[i]
+                s.pos += 1
+                s.req.out_tokens.append(int(toks[i]))
+                if len(s.req.out_tokens) >= s.target:
+                    finish(i)
+        qdepth.set(0)
+        return results
+
+    def _run_chunked(self, requests: List[Request], temperature: float,
+                     max_steps: int) -> Dict[int, List[int]]:
+        """Chunked-prefill loop: admission only reserves arena blocks
+        (and maps any shared prefix); each scheduler step then dispatches
+        one prefill chunk for the oldest mid-prefill slot, followed by
+        one decode step over the fully-prefilled slots.  Mid-prefill
+        slots are masked out of the decode dispatch's block table so the
+        inactive-row scratch write can never land in their (possibly
+        shared) blocks."""
+        tracer = get_tracer()
+        ttft_h, dec_h, occ_h, qdepth, req_c, tok_c = self._metric_handles()
+        hit_c = self.metrics.counter("serve.prefix_hit_tokens")
+        miss_c = self.metrics.counter("serve.prefix_miss_tokens")
+        base_key = jax.random.PRNGKey(self.seed)
+        T = self.chunk_tokens
+
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.uid)))
+        queue: deque = deque()          # arrived, waiting for a slot
+        arrive_wall: Dict[int, float] = {}
+        slots: List[Optional[_Slot]] = [None] * self.batch
+        results: Dict[int, List[int]] = {}
+        clock = 0.0                     # virtual steps
+
+        def finish(i: int):
+            s = slots[i]
+            s.req.done = True
+            s.req.total_ms = (time.perf_counter() - s.t_arrive) * 1e3
+            results[s.req.uid] = s.req.out_tokens
+            req_c.inc()
+            tok_c.inc(len(s.req.out_tokens))
+            self.cache.free_slot(i)
+            slots[i] = None
+
+        def drain_arrivals():
+            now = time.perf_counter()
+            while pending and pending[0].arrival <= clock:
+                r = pending.popleft()
+                queue.append(r)
+                arrive_wall[r.uid] = now
+            qdepth.set(len(queue))
+
+        while pending or queue or any(s is not None for s in slots):
+            drain_arrivals()
+
+            # admission: reserve blocks + map shared prefix, no dispatch.
+            # The match is capped to whole chunks strictly below the
+            # prompt's last row, so at least one chunk (and the first
+            # token's logits) is always computed live with the same
+            # dispatch shape the solo oracle uses.
+            n_adm = 0
+            while queue and n_adm < self.max_prefills_per_step:
+                free = [i for i, s in enumerate(slots) if s is None]
+                if not free:
+                    break
+                r = queue[0]
+                target = min(r.max_new, max_steps)
+                plen = len(r.prompt)
+                lifetime = plen + target
+                if not self.cache.can_admit(lifetime):
+                    if not any(s is not None for s in slots):
+                        raise RuntimeError(
+                            f"request {r.uid} (lifetime {lifetime} tokens)"
+                            f" cannot fit the arena even when idle")
+                    break               # wait for a slot to free blocks
+                queue.popleft()
+                i = free[0]
+                matched = self.cache.admit_shared(
+                    i, np.asarray(r.prompt, np.int32).reshape(-1),
+                    lifetime, max_match_rows=((plen - 1) // T) * T,
+                    granule_rows=T)
+                hit_c.inc(matched)
+                miss_c.inc(plen - matched)
+                slots[i] = _Slot(r, pos=plen, target=target,
+                                 t_arrive=arrive_wall[r.uid], plen=plen,
+                                 filled=matched, prefilling=True)
+                n_adm += 1
+
+            # one prefill chunk for the oldest mid-prefill slot
+            pref = [i for i, s in enumerate(slots)
+                    if s is not None and s.prefilling]
+            if pref:
+                i = min(pref, key=lambda j: (slots[j].req.arrival,
+                                             slots[j].req.uid))
+                s = slots[i]
+                r = s.req
+                if not s.started:
+                    # last chance to share: a producer that was still
+                    # mid-prefill at our admission has registered its
+                    # completed chunks by now — graft them on while this
+                    # slot has written nothing
+                    grown = self.cache.extend_match(
+                        i, np.asarray(r.prompt, np.int32).reshape(-1),
+                        max_match_rows=((s.plen - 1) // T) * T,
+                        granule_rows=T)
+                    if grown > s.filled:
+                        hit_c.inc(grown - s.filled)
+                        miss_c.inc(s.filled - grown)
+                        s.filled = grown
+                    s.started = True
+                start = s.filled
+                n = min(T, s.plen - start)
+                width = next_pow2(n)
+                self.cache.extend_to(i, start + n)
+                toks = np.zeros((1, width), np.int32)
+                toks[0, :n] = np.asarray(r.prompt,
+                                         np.int32).reshape(-1)[start:start + n]
+                with tracer.span("serve.prefill_chunk", uid=r.uid,
+                                 start=start, n_tokens=n):
+                    logits, greedy, self.cache.state = self._get_chunk(
+                        width)(self.params, self.cache.state,
+                               jnp.asarray(toks),
+                               jnp.asarray(self.cache.tables[i:i + 1]),
+                               jnp.int32(start), jnp.int32(n))
+                    s.filled = start + n
+                    last = s.filled >= s.plen
+                    if last:
+                        if temperature <= 0:
+                            tok = int(jax.block_until_ready(greedy)[0])
+                        else:
+                            key = _request_key(base_key, r.uid)
+                            tok = int(jax.block_until_ready(
+                                sample(logits, jax.random.fold_in(key, 0),
+                                       temperature))[0])
+                clock += 1.0
+                # register incrementally: rows in completed absolute
+                # chunks are final (later chunks never rewrite them), so
+                # a prompt arriving mid-prefill can already share them.
+                # Only FULL aligned chunks qualify — rows of a final
+                # partial chunk ran at a different dispatch width, so
+                # their low bits are not what a sharing consumer's
+                # oracle would produce.
+                self.cache.register_prefix(
+                    i, np.asarray(r.prompt, np.int32).reshape(-1),
+                    (s.filled // T) * T)
+                if last:
+                    r.ttft_ms = (time.perf_counter()
+                                 - arrive_wall[r.uid]) * 1e3
+                    ttft_h.observe(r.ttft_ms)
+                    r.out_tokens.append(tok)
+                    s.prefilling = False
+                    if len(r.out_tokens) >= s.target:
+                        finish(i)
+                drain_arrivals()
+
+            active = [i for i, s in enumerate(slots)
+                      if s is not None and not s.prefilling]
+            if not active:
+                if any(s is not None for s in slots):
+                    continue            # prefill chunks still in flight
+                if pending:
+                    # idle: jump the virtual clock to the next arrival
+                    clock = max(clock, pending[0].arrival)
+                    continue
+                if queue:
+                    continue            # admission will retry (or raise)
+                break
+
+            # one decode step over the fully-prefilled slots
+            occ_h.observe(len(active) / self.batch)
+            pref = [i for i, s in enumerate(slots)
+                    if s is not None and s.prefilling]
+            tokens = np.zeros((self.batch, 1), np.int32)
+            slot_pos = np.zeros((self.batch,), np.int32)
+            for i in active:
+                s = slots[i]
+                tokens[i, 0] = s.req.out_tokens[-1]
+                slot_pos[i] = s.pos
+                self.cache.append(i, s.pos)
+            if pref:
+                # mask mid-prefill slots: their decode rows are inactive
+                # (slot_pos 0) and must write the scratch block, not the
+                # real block their table maps at row 0
+                tbl = self.cache.tables.copy()
+                tbl[pref] = -1
+                tables = jnp.asarray(tbl)
+            else:
+                tables = self.cache.device_tables()
+            t0 = time.perf_counter()
+            with tracer.span("serve.decode_step", n_active=len(active),
+                             queued=len(queue), prefilling=len(pref)):
+                logits, greedy, self.cache.state = self._decode(
+                    self.params, self.cache.state, jnp.asarray(tokens),
+                    tables, jnp.asarray(slot_pos))
                 if temperature <= 0:
                     toks = jax.block_until_ready(greedy)
                 else:

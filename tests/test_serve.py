@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import dataclasses
+
 from repro.core.config import ArchConfig, AttnConfig
 from repro.distributed.sharding import split_tree
 from repro.launch.serve import ServingLoop
@@ -15,7 +17,7 @@ from repro.models import attention as attn
 from repro.models import build_model
 from repro.models import transformer as tfm
 from repro.serve import (CohortScheduler, ContinuousScheduler, PagedKVCache,
-                         Request, make_trace, next_pow2)
+                         Request, block_hashes, make_trace, next_pow2)
 
 
 def _cfg(vocab=128):
@@ -108,6 +110,170 @@ def test_paged_cache_append_guards():
 def test_next_pow2():
     assert [next_pow2(n) for n in (1, 2, 3, 8, 9, 17)] == \
         [1, 2, 4, 8, 16, 32]
+
+
+def test_free_slot_releases_midprefill_reservation():
+    """Regression: cancelling a slot between admission and its first
+    append must return the lifetime-*reserved* (never-allocated) blocks
+    too — repeated admit-then-cancel at full reservation pressure must
+    not leak a single block."""
+    cache = PagedKVCache(_cfg(), batch=2, total_tokens=64, max_seq=64,
+                         block_len=8)
+    free0 = cache.free_blocks
+    for _ in range(4 * cache.n_blocks):      # far past arena capacity
+        cache.admit(0, prefill_tokens=8, lifetime_tokens=64)
+        cache.free_slot(0)                   # cancelled mid-prefill
+        assert cache.free_blocks == free0
+        assert cache.reserved_blocks == 0
+        assert cache.used_blocks == 0
+    # same invariant through the shared-admission path
+    cache2 = PagedKVCache(_cfg(), batch=2, total_tokens=64, max_seq=64,
+                          block_len=8, prefix_cache=True)
+    toks = np.arange(40, dtype=np.int32)
+    free0 = cache2.free_blocks
+    for _ in range(4 * cache2.n_blocks):
+        cache2.admit_shared(0, toks, 64, max_match_rows=32)
+        cache2.free_slot(0)
+        assert cache2.free_blocks + cache2.evictable_blocks == free0
+        assert cache2.reserved_blocks == 0
+        assert cache2.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: content addressing, refcounts, CoW, retention
+# ---------------------------------------------------------------------------
+
+def test_block_hashes_chain_property():
+    toks = np.arange(32, dtype=np.int32)
+    h2 = block_hashes(toks[:16], 2, 8)
+    h4 = block_hashes(toks, 4, 8)
+    assert h4[:2] == h2                     # prefix of hashes = hash of prefix
+    assert len(set(h4)) == 4
+    # a flipped token in block 0 changes every chain hash after it
+    other = toks.copy()
+    other[0] += 1
+    assert all(a != b for a, b in zip(block_hashes(other, 4, 8), h4))
+    # a flipped token in block 2 leaves blocks 0-1 alone
+    other2 = toks.copy()
+    other2[16] += 1
+    assert block_hashes(other2, 4, 8)[:2] == h2
+    with pytest.raises(ValueError):
+        block_hashes(toks[:10], 2, 8)
+
+
+def _prefix_cache(batch=3, total=80, max_seq=48):
+    return PagedKVCache(_cfg(), batch=batch, total_tokens=total,
+                        max_seq=max_seq, block_len=8, prefix_cache=True)
+
+
+def test_admit_shared_maps_registered_prefix_by_reference():
+    cache = _prefix_cache()
+    toks = np.arange(100, 132, dtype=np.int32)      # 4 full blocks
+    cache.admit(0, prefill_tokens=32, lifetime_tokens=32)
+    producer = list(cache._slot_blocks[0])
+    cache.register_prefix(0, toks, 32)
+    assert cache.match_prefix(toks, 32) == producer
+
+    # consumer with the same 32-token prefix + an 8-token private tail
+    toks2 = np.concatenate([toks, np.arange(8, dtype=np.int32)])
+    m = cache.admit_shared(1, toks2, lifetime_tokens=48, max_match_rows=32)
+    assert m == 32
+    assert cache._slot_blocks[1] == producer        # mapped, not copied
+    assert all(cache._ref[b] == 2 for b in producer)
+    # reservation shrank by the 4 matched blocks: 48 tokens = 6 blocks
+    assert cache._slot_reserved[1] == 2
+    assert cache.hit_tokens == 32 and cache.miss_tokens == 8
+    assert cache.cache_hit_ratio == pytest.approx(32 / 40)
+
+    # granule rounding: a 4-block match capped to 2-chunk (16-row) units
+    cache.free_slot(1)
+    m = cache.admit_shared(1, toks2, lifetime_tokens=48,
+                           max_match_rows=32, granule_rows=16)
+    assert m == 32                                  # 32 is a 16-multiple
+    cache.free_slot(1)
+    m = cache.admit_shared(2, toks2[:28], lifetime_tokens=28,
+                           max_match_rows=24, granule_rows=16)
+    assert m == 16                                  # 3 blocks round to 2
+
+
+def test_free_slot_retains_registered_blocks_until_evicted():
+    cache = _prefix_cache(batch=2, total=40, max_seq=40)  # 6 blocks
+    toks = np.arange(16, dtype=np.int32)
+    cache.admit(0, prefill_tokens=16, lifetime_tokens=16)
+    shared = list(cache._slot_blocks[0])
+    cache.register_prefix(0, toks, 16)
+    free_before = cache.free_blocks
+    cache.free_slot(0)
+    # registered blocks park in the evictable pool, not the free list
+    assert cache.free_blocks == free_before
+    assert cache.evictable_blocks == 2
+    # a later match revives them by reference
+    m = cache.admit_shared(0, toks, lifetime_tokens=16, max_match_rows=16)
+    assert m == 16 and cache.evictable_blocks == 0
+    assert cache._slot_blocks[0] == shared
+    cache.free_slot(0)
+
+    # exhausting the free list forces LRU eviction of the retained pool
+    cache.admit(1, prefill_tokens=40, lifetime_tokens=40)   # 5 blocks
+    assert cache.evictable_blocks < 2       # at least one was reclaimed
+    evicted = [b for b in shared if b in cache._slot_blocks[1]]
+    assert evicted                          # reused for the new tenant
+    assert cache.match_prefix(toks, 16) == []   # registration dropped
+    pos = np.asarray(cache.state.pos)
+    # eviction scrubbed the reclaimed rows before reuse
+    for b in evicted:
+        assert (pos[b] == -1).all()
+
+
+def test_copy_on_write_on_fork():
+    cache = _prefix_cache(batch=2, total=80, max_seq=48)
+    cache.admit(0, prefill_tokens=20, lifetime_tokens=20)  # partial block 2
+    src_blocks = list(cache._slot_blocks[0])
+    # give the shared partial block recognizable device content
+    pos = np.array(cache.state.pos)
+    pos[src_blocks[-1], :4] = np.arange(16, 20)
+    cache.state = tfm.PagedState(k=cache.state.k, v=cache.state.v,
+                                 pos=jnp.asarray(pos))
+
+    cache.fork_slot(0, 1, src_len=20, lifetime_tokens=28)
+    assert cache._slot_blocks[1] == src_blocks
+    assert all(cache._ref[b] == 2 for b in src_blocks)
+    # 28 tokens = 4 blocks; 3 mapped -> 1 lifetime + 1 CoW reserve
+    assert cache._slot_reserved[1] == 2
+
+    cache.append(1, 20)         # lands in the shared partial block
+    forked = cache._slot_blocks[1]
+    assert forked[:2] == src_blocks[:2]     # full blocks still shared
+    assert forked[2] != src_blocks[2]       # partial block went private
+    assert cache._ref[src_blocks[2]] == 1   # src keeps the original
+    assert cache._slot_blocks[0] == src_blocks
+    assert cache.tables[1, 2] == forked[2]
+    assert cache._slot_reserved[1] == 1     # CoW drew from the reservation
+    # the copy carried the device rows
+    pos = np.asarray(cache.state.pos)
+    np.testing.assert_array_equal(pos[forked[2]], pos[src_blocks[2]])
+    assert (pos[forked[2], :4] == np.arange(16, 20)).all()
+    # freeing the fork returns only its private block to the free list
+    free_before = cache.free_blocks
+    cache.free_slot(1)
+    assert cache.free_blocks == free_before + 1
+    assert all(cache._ref[b] == 1 for b in src_blocks)
+
+
+def test_reset_prefix_cache_reclaims_retained_pool():
+    cache = _prefix_cache(batch=1, total=40, max_seq=40)
+    toks = np.arange(16, dtype=np.int32)
+    cache.admit_shared(0, toks, 16, max_match_rows=16)
+    cache.extend_to(0, 16)          # shared admission allocates lazily
+    cache.register_prefix(0, toks, 16)
+    cache.free_slot(0)
+    assert cache.evictable_blocks == 2 and cache.miss_tokens == 16
+    free_before = cache.free_blocks
+    cache.reset_prefix_cache()
+    assert cache.evictable_blocks == 0
+    assert cache.free_blocks == free_before + 2
+    assert cache.hit_tokens == 0 and cache.miss_tokens == 0
+    assert cache.match_prefix(toks, 16) == []
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +453,54 @@ def test_continuous_sampling_is_scheduling_independent(served):
 # Arrival traces + launch wrapper + bench rows
 # ---------------------------------------------------------------------------
 
+def test_traces_edge_cases_deterministic():
+    """rate=0, burst=1 and single-request traces are deterministic and
+    (for rate=0) identical across arrival kinds and seeds."""
+    for kind in ("uniform", "poisson", "bursty"):
+        for seed in (0, 7):
+            tr = make_trace(kind, 4, vocab=64, rate=0.0, seed=seed)
+            assert [r.arrival for r in tr] == [0.0] * 4
+    # rate=0 draws nothing from the RNG: prompts match the rate>0 trace
+    a = make_trace("poisson", 4, vocab=64, rate=0.0, seed=3)
+    b = make_trace("poisson", 4, vocab=64, rate=0.5, seed=3)
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    # burst=1 degenerates to poisson exactly (same draws, same gaps)
+    p = make_trace("poisson", 6, vocab=64, rate=0.5, seed=5)
+    b1 = make_trace("bursty", 6, vocab=64, rate=0.5, burst=1, seed=5)
+    assert [r.arrival for r in p] == [r.arrival for r in b1]
+    # single-request traces replay identically
+    s1 = make_trace("bursty", 1, vocab=64, rate=0.5, burst=4, seed=9)
+    s2 = make_trace("bursty", 1, vocab=64, rate=0.5, burst=4, seed=9)
+    assert len(s1) == 1 and s1[0].arrival == s2[0].arrival
+    assert np.array_equal(s1[0].prompt, s2[0].prompt)
+    assert make_trace("uniform", 0, vocab=64) == []
+    # invalid inputs fail loudly even when rate=0 would trivialize gaps
+    with pytest.raises(ValueError):
+        make_trace("laplace", 2, vocab=64, rate=0.0)
+    with pytest.raises(ValueError):
+        make_trace("bursty", 2, vocab=64, rate=0.0, burst=0)
+    with pytest.raises(ValueError):
+        make_trace("poisson", 2, vocab=64, rate=-1.0)
+    with pytest.raises(ValueError):
+        make_trace("uniform", -1, vocab=64)
+
+
+def test_traces_shared_prefix_groups():
+    plain = make_trace("uniform", 6, vocab=64, rate=0.5, seed=4)
+    shared = make_trace("uniform", 6, vocab=64, rate=0.5, seed=4,
+                        prefix_len=16, prefix_group=3)
+    # every request in a group shares the same 16 leading tokens
+    for g in (0, 1):
+        heads = [shared[g * 3 + i].prompt[:16] for i in range(3)]
+        assert all(np.array_equal(heads[0], h) for h in heads[1:])
+    assert not np.array_equal(shared[0].prompt[:16], shared[3].prompt[:16])
+    # tails and arrivals replay the prefix-free trace exactly (prefixes
+    # are drawn after the prompts, so the RNG stream is unperturbed)
+    for x, y in zip(plain, shared):
+        assert np.array_equal(x.prompt, y.prompt[16:])
+        assert x.arrival == y.arrival and x.max_new == y.max_new
+
+
 def test_traces_deterministic_and_shaped():
     a = make_trace("poisson", 8, vocab=64, rate=0.5, seed=3)
     b = make_trace("poisson", 8, vocab=64, rate=0.5, seed=3)
@@ -343,3 +557,167 @@ def test_serve_scenarios_registered_and_runnable(served):
     assert m["tokens"] > 0 and m["requests"] == 3
     assert 0 < m["occupancy_mean"] <= 1
     assert m["tokens_per_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill + prefix sharing
+# ---------------------------------------------------------------------------
+
+def _chunked(cfg, params, batch, *, chunk=16, prefix=False):
+    return ContinuousScheduler(cfg, params, batch=batch, max_seq=64,
+                               block_len=8, chunk_tokens=chunk,
+                               prefix_cache=prefix)
+
+
+def test_chunked_matches_chunked_solo_oracle_two_orders(served):
+    """Chunked prefill must not change greedy outputs vs serving each
+    request alone through the same chunked path, under both FIFO and
+    reversed arrival orders, with and without prefix sharing."""
+    cfg, _, params = served
+    base = _reqs(cfg, lens=(21, 7, 12), max_new=(3, 4, 3), seed=12)
+
+    def mk(order):
+        arr = {i: float(j) for j, i in enumerate(order)}
+        return [Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
+                        arrival=arr[r.uid]) for r in base]
+
+    solo = _chunked(cfg, params, 1)
+    oracle = {}
+    for r in mk([0, 1, 2]):
+        r.arrival = 0.0
+        oracle.update(solo.run([r]))
+    for prefix in (False, True):
+        fifo = _chunked(cfg, params, 2, prefix=prefix).run(mk([0, 1, 2]))
+        rev = _chunked(cfg, params, 2, prefix=prefix).run(mk([2, 1, 0]))
+        assert fifo == oracle
+        assert rev == oracle
+
+
+def test_prefix_sharing_hits_and_is_bit_identical(served):
+    """Requests sharing a 32-token prefix: the prefix cache must serve
+    later prefills from shared blocks (hit_tokens > 0) without changing
+    a single greedy token, and the arena must drain to free + evictable."""
+    cfg, _, params = served
+    rng = np.random.default_rng(13)
+    head = rng.integers(0, cfg.vocab, (32,)).astype(np.int32)
+
+    def mk():
+        return [Request(
+            uid=i,
+            prompt=np.concatenate(
+                [head, rng2.integers(0, cfg.vocab, (t,)).astype(np.int32)]),
+            max_new=3, arrival=float(i))
+            for i, (rng2, t) in enumerate(
+                (np.random.default_rng(20 + i), tail)
+                for i, tail in enumerate((5, 9, 3, 7)))]
+
+    plain = _chunked(cfg, params, 2)
+    shared = _chunked(cfg, params, 2, prefix=True)
+    out_plain = plain.run(mk())
+    out_shared = shared.run(mk())
+    assert out_shared == out_plain
+    assert plain.cache.hit_tokens == 0
+    assert shared.cache.hit_tokens > 0
+    assert 0 < shared.cache.cache_hit_ratio < 1
+    c = shared.cache
+    assert c.used_blocks == 0 and c.reserved_blocks == 0
+    assert c.free_blocks + c.evictable_blocks == c.n_blocks - 1
+
+
+def test_chunked_jit_cache_bounded(served):
+    """Ragged prompt lengths through chunked prefill compile at most one
+    chunk fn per pow2 width <= chunk_tokens, independent of the trace."""
+    cfg, _, params = served
+    sched = _chunked(cfg, params, 2, chunk=16)
+    lens = (3, 5, 9, 13, 16, 17, 21, 26, 31, 33)
+    sched.run(_reqs(cfg, lens=lens, max_new=[2] * len(lens), seed=14))
+    widths = set(sched._chunk_fns)
+    assert widths <= {1, 2, 4, 8, 16}
+    assert len(widths) <= 5
+    # a second ragged run adds no new entries
+    sched.run(_reqs(cfg, lens=(4, 11, 27), max_new=(2, 2, 2), seed=15))
+    assert set(sched._chunk_fns) == widths
+
+
+def test_chunked_sampling_is_scheduling_independent(served):
+    """Temperature > 0 under chunked prefill + sharing still uses
+    per-request keys: outputs are independent of batch and order."""
+    cfg, _, params = served
+    mk = lambda: _reqs(cfg, lens=(9, 18, 7), max_new=(3, 3, 3), seed=16)
+    a = ContinuousScheduler(cfg, params, batch=3, max_seq=64, block_len=8,
+                            chunk_tokens=8, seed=21).run(mk(),
+                                                         temperature=0.7)
+    b = ContinuousScheduler(cfg, params, batch=1, max_seq=64, block_len=8,
+                            chunk_tokens=8, prefix_cache=True,
+                            seed=21).run(mk()[::-1], temperature=0.7)
+    assert a == b
+
+
+def test_chunk_tokens_validation(served):
+    cfg, _, params = served
+    with pytest.raises(ValueError, match="multiple of block_len"):
+        ContinuousScheduler(cfg, params, batch=1, max_seq=64, block_len=8,
+                            chunk_tokens=12)
+    with pytest.raises(ValueError, match="multiple of block_len"):
+        ContinuousScheduler(cfg, params, batch=1, max_seq=64, block_len=8,
+                            chunk_tokens=4)
+    vlm_cfg = dataclasses.replace(cfg, n_patches=4)
+    with pytest.raises(ValueError, match="vlm"):
+        ContinuousScheduler(vlm_cfg, params, batch=1, max_seq=64,
+                            block_len=8, chunk_tokens=16)
+    # prefix_cache alone implies the finest legal chunk (block_len), so
+    # short shared prefixes still land on a match boundary
+    sched = ContinuousScheduler(cfg, params, batch=1, max_seq=64,
+                                block_len=8, prefix_cache=True)
+    assert sched.chunk_tokens == 8 and sched.prefix_cache
+
+
+def test_serving_loop_auto_disables_chunking():
+    """Schedulers without the chunked path (cohort fallback) silently
+    drop the chunk/prefix flags instead of crashing."""
+    cfg = ArchConfig(name="ssm", family="ssm", n_layers=2, d_model=32,
+                     n_heads=4, n_kv_heads=2, d_ff=64, vocab=64)
+    model = build_model(cfg)
+    params, _ = split_tree(model.init(jax.random.PRNGKey(0)))
+    loop = ServingLoop(cfg, params, batch=2, scheduler="continuous",
+                       chunk_tokens=16, prefix_cache=True)
+    assert loop.scheduler_kind == "cohort"
+    assert loop.chunk_tokens is None and loop.prefix_cache is False
+    out = loop.run(_reqs(cfg, lens=(8, 8), max_new=(2, 2)))
+    assert all(len(v) == 2 for v in out.values())
+
+
+def test_compare_gates_serving_metrics():
+    """tokens_per_s (inverted, host-scaled) and cache_hit_ratio (absolute
+    band) gate as synthetic scenario:metric rows."""
+    from repro.bench.results import BenchReport, BenchResult
+    from repro.obs.compare import compare_reports
+
+    def row(tps, hit, us=1000.0):
+        return BenchResult(
+            scenario="serve/prefix/shared", kernel="serve", shape=[4, 16],
+            dtype="bf16", strategy="continuous", chip="TPUv5e",
+            metrics={"us_median": us, "times_us": [us] * 5,
+                     "tokens_per_s": tps, "cache_hit_ratio": hit},
+            kind="measured", section="serve")
+
+    def rep(r):
+        rep = BenchReport()
+        rep.add(r)
+        return rep
+
+    base = rep(row(1000.0, 0.60))
+    res = compare_reports(base, rep(row(700.0, 0.61)))
+    by = {v.scenario: v for v in res.verdicts}
+    assert by["serve/prefix/shared:tokens_per_s"].verdict == "regress"
+    assert by["serve/prefix/shared:cache_hit_ratio"].verdict == "pass"
+    res = compare_reports(base, rep(row(1300.0, 0.50)))
+    by = {v.scenario: v for v in res.verdicts}
+    assert by["serve/prefix/shared:tokens_per_s"].verdict == "improve"
+    assert by["serve/prefix/shared:cache_hit_ratio"].verdict == "regress"
+    assert res.n_regressions == 1
+    # a uniformly slower host: us up 2x, tokens/s down 2x -> all pass
+    res = compare_reports(base, rep(row(500.0, 0.60, us=2000.0)),
+                          normalize=True)
+    assert res.n_regressions == 0
+    assert {v.verdict for v in res.verdicts} == {"pass"}
